@@ -1,0 +1,125 @@
+"""Shared fixtures for the paper-fidelity benchmarks.
+
+Trains (once, cached to results/bench_models/) a small Llama-class model:
+  * base  — pretrained on the noise mixture
+  * ft    — base fine-tuned on the Sort task (the "WizardMath" stand-in)
+Benchmarks then compress the REAL SFT delta and measure exact-match task
+accuracy through the multi-tenant engine, mirroring the paper's
+GSM8k/HumanEval protocol at tiny scale.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.configs import ArchConfig
+from repro.data import PretrainMixture, SortTask
+from repro.models import lm
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig
+from repro.serve import Engine
+from repro.train import make_train_step
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "results")
+
+BENCH_ARCH = ArchConfig(
+    name="bench-llama-3m", family="dense", n_layers=4, d_model=128, n_heads=4,
+    n_kv=2, head_dim=32, d_ff=256, vocab=64, act="silu", tie_embeddings=True,
+)
+N_DIGITS = 6
+SEQ = 32
+
+
+def task():
+    return SortTask(vocab=BENCH_ARCH.vocab, seq_len=SEQ, batch=32,
+                    n_digits=N_DIGITS, seed=1)
+
+
+def _train(cfg, params, data, steps, lr):
+    opt = adamw.init(params)
+    step = jax.jit(make_train_step(cfg, AdamWConfig(lr=lr, weight_decay=0.0)))
+    m = {}
+    for i in range(steps):
+        params, opt, m = step(params, opt, data.batch_at(i), jax.random.PRNGKey(i))
+    return params, float(m.get("loss", jnp.nan))
+
+
+def get_models(force: bool = False):
+    """(cfg, base_params, ft_params) — cached across benchmark modules."""
+    cfg = BENCH_ARCH
+    ckdir = os.path.join(RESULTS, "bench_models")
+    ck = Checkpointer(ckdir)
+    tmpl = {"base": lm.init_params(cfg, jax.random.PRNGKey(0)),
+            "ft": lm.init_params(cfg, jax.random.PRNGKey(0))}
+    if not force and ck.latest_step() is not None:
+        state, _ = ck.restore(tmpl)
+        return cfg, state["base"], state["ft"]
+    t0 = time.time()
+    base = lm.init_params(cfg, jax.random.PRNGKey(0))
+    # base learns token statistics + the task FORMAT (random answers), so
+    # the SFT delta is small relative to W_base — the paper's regime
+    from repro.data.pipeline import FormatOnlyTask
+    pre = PretrainMixture(vocab=cfg.vocab, seq_len=SEQ, batch=32, seed=0)
+    base, pre_loss = _train(cfg, base, pre, 80, 5e-3)
+    fmt = FormatOnlyTask(vocab=cfg.vocab, seq_len=SEQ, batch=32, n_digits=N_DIGITS, seed=2)
+    base, fmt_loss = _train(cfg, base, fmt, 250, 3e-3)
+    ft, ft_loss = _train(cfg, base, task(), 300, 1e-3)
+    import repro.utils as u
+    dn = np.sqrt(sum(float(jnp.sum((a.astype(jnp.float32) - b.astype(jnp.float32)) ** 2))
+                     for a, b in zip(jax.tree.leaves(base), jax.tree.leaves(ft))))
+    bn = np.sqrt(sum(float(jnp.sum(a.astype(jnp.float32) ** 2))
+                     for a in jax.tree.leaves(base)))
+    print(f"# trained bench models in {time.time() - t0:.0f}s "
+          f"(pre {pre_loss:.3f}, fmt {fmt_loss:.3f}, sft {ft_loss:.3f}, "
+          f"|delta|/|base|={dn / bn:.3f})")
+    ck.save(1, {"base": base, "ft": ft})
+    return cfg, base, ft
+
+
+def task_accuracy(cfg, params, deltas=None, n_batches=3, base_params=None) -> float:
+    """Exact-match accuracy on held-out sort prompts via the serve engine."""
+    eng = Engine(cfg, base_params if base_params is not None else params,
+                 max_seq=SEQ + N_DIGITS + 2)
+    tname = None
+    if deltas is not None:
+        eng.register_tenant("t", deltas)
+        tname = "t"
+    t = task()
+    correct = total = 0
+    for s in range(n_batches):
+        prompts, targets = t.prompts_at(10_000 + s)
+        gen = eng.generate(tname, prompts, max_new_tokens=N_DIGITS)
+        correct += (gen[:, :N_DIGITS] == targets).sum()
+        total += targets.size
+    return float(correct) / float(total)
+
+
+def layer_l2(cfg, base, ft, deltas, n_tokens=64) -> float:
+    """Paper Eq. 2 proxy: mean over compressed layers of ||XW - XW_hat||^2."""
+    from repro.core import reconstruct_dense
+    from repro.utils import flatten_with_paths
+    from repro.core.pack import PackedDelta
+    rng = jax.random.PRNGKey(5)
+    fb = flatten_with_paths(base)
+    ff = flatten_with_paths(ft)
+    fd = flatten_with_paths(deltas, is_leaf=lambda x: isinstance(x, PackedDelta))
+    errs = []
+    for k, d in fd.items():
+        if d is None or not isinstance(d, PackedDelta):
+            continue
+        wb = fb[k].astype(jnp.float32).reshape(-1, d.h_in, d.h_out)
+        wf = ff[k].astype(jnp.float32).reshape(-1, d.h_in, d.h_out)
+        dense = reconstruct_dense(d).reshape(-1, d.h_in, d.h_out)
+        x = jax.random.normal(jax.random.fold_in(rng, hash(k) & 0xFFFF), (n_tokens, d.h_in))
+        for i in range(wb.shape[0]):
+            errs.append(float(jnp.mean((x @ wf[i] - x @ (wb[i] + dense[i])) ** 2)))
+    return float(np.mean(errs))
+
+
+def csv_row(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

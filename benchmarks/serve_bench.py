@@ -1,0 +1,60 @@
+"""Serving micro-benchmarks (CPU wall-clock; TPU numbers come from the
+dry-run roofline, not from this container).
+
+Measures: decode step latency base vs base+delta (separate computation
+overhead), multi-tenant memory footprint vs N full fine-tuned models.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, get_models
+from repro.core import DeltaDQSpec, compress
+from repro.models import lm
+from repro.serve import Engine
+from repro.utils import tree_bytes
+
+
+def _time(fn, *args, n=20):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def main():
+    cfg, base, ft = get_models()
+    deltas, report = compress(base, ft, DeltaDQSpec(alpha=8, k_bits=4, m=8, h_g=64))
+    print("#", report.summary())
+
+    B, S = 8, 32
+    cache = lm.init_cache(cfg, B, S)
+    tok = jnp.ones((B, 1), jnp.int32)
+    dec_base = jax.jit(lambda c, t: lm.decode_step(cfg, base, c, t, jnp.int32(4)))
+    dec_delta = jax.jit(lambda c, t: lm.decode_step(cfg, base, c, t, jnp.int32(4), deltas=deltas))
+
+    us_base = _time(dec_base, cache, tok)
+    us_delta = _time(dec_delta, cache, tok)
+    print(f"decode_base_us,{us_base:.1f}")
+    print(f"decode_with_delta_us,{us_delta:.1f}")
+
+    base_bytes = tree_bytes(base)
+    delta_bytes = report.packed_total_bits / 8
+    n_tenants = 16
+    full_bytes = base_bytes * (1 + n_tenants)
+    ours_bytes = base_bytes + delta_bytes * n_tenants
+    print(f"memory_16_tenants: full={full_bytes / 1e6:.1f}MB "
+          f"deltadq={ours_bytes / 1e6:.1f}MB saving={full_bytes / ours_bytes:.1f}x")
+
+    csv_row("serve_bench", us_delta,
+            f"delta_overhead={us_delta / us_base:.2f}x;mem_saving_16t={full_bytes / ours_bytes:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

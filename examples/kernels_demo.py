@@ -1,0 +1,42 @@
+"""Pallas kernel demo: the TPU scatter-to-dense + MXU delta matmul.
+
+Shows the three kernels against their oracles (interpret mode on CPU;
+compiled on a real TPU) and the HBM-bytes arithmetic that makes the
+compressed layout a win for memory-bound decode.
+
+    PYTHONPATH=src python examples/kernels_demo.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import groupwise_dropout_pack
+from repro.kernels import ops, ref
+from repro.roofline.analysis import HBM_BW
+
+T, H_IN, H_OUT, H_G, ALPHA, K = 128, 2048, 512, 128, 8, 4
+
+rng = jax.random.PRNGKey(0)
+delta = jax.random.normal(rng, (H_IN, H_OUT)) * 0.01
+packed = groupwise_dropout_pack(rng, delta, h_g=H_G, alpha=ALPHA, k_bits=K, m=8)
+x = jax.random.normal(jax.random.fold_in(rng, 1), (T, H_IN))
+w = jax.random.normal(jax.random.fold_in(rng, 2), (H_IN, H_OUT)) * 0.05
+
+for name, got, want in [
+    ("delta_spmm", ops.delta_spmm(x, packed, interpret=True), ref.delta_spmm_ref(x, packed)),
+    ("fused_base_delta", ops.fused_base_delta(x, w, packed, interpret=True),
+     ref.fused_base_delta_ref(x, w, packed)),
+    ("dequant", ops.dequant(packed, interpret=True), ref.dequant_tile_ref(packed)),
+]:
+    err = float(jnp.max(jnp.abs(got - want)))
+    print(f"{name:18s} max|err| vs oracle = {err:.2e}")
+
+dense_bytes = H_IN * H_OUT * 2                       # bf16 delta
+packed_bytes = packed.idx.size + packed.codes.size   # uint8 arrays
+print(f"\nHBM bytes per layer: dense delta {dense_bytes / 1e3:.0f}KB -> "
+      f"packed {packed_bytes / 1e3:.0f}KB ({dense_bytes / packed_bytes:.1f}x less wire traffic)")
+print(f"at v5e HBM bw ({HBM_BW / 1e9:.0f}GB/s) that is "
+      f"{dense_bytes / HBM_BW * 1e6:.1f}us -> {packed_bytes / HBM_BW * 1e6:.2f}us per layer per step")
+print("the dense tile is reconstructed inside VMEM and fed to the MXU — it never touches HBM")

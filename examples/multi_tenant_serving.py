@@ -1,0 +1,75 @@
+"""Multi-tenant serving demo: one base, many fine-tunes, mixed request batch.
+
+Simulates the paper's deployment (Fig. 2): N tenants fine-tuned for
+different "skills" register 128x-compressed deltas with one engine; a mixed
+request stream is served with per-tenant grouping (separate computation).
+
+    PYTHONPATH=src python examples/multi_tenant_serving.py --tenants 4
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import DeltaDQSpec, compress
+from repro.models import lm
+from repro.serve import Engine
+from repro.utils import tree_bytes
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tenants", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config("llama3.2-1b")
+    rng = jax.random.PRNGKey(0)
+    base = lm.init_params(cfg, rng)
+    eng = Engine(cfg, base, max_seq=48)
+
+    print(f"registering {args.tenants} tenants at 128x delta compression ...")
+    spec = DeltaDQSpec(alpha=8.0, k_bits=4, m=8, h_g=16)
+    for t in range(args.tenants):
+        ft = jax.tree.map(
+            lambda p, t=t: p + 0.02 * jax.random.normal(
+                jax.random.fold_in(rng, 100 + t), p.shape, jnp.float32).astype(p.dtype)
+            if p.ndim >= 2 else p, base)
+        deltas, report = compress(base, ft, spec)
+        eng.register_tenant(f"tenant{t}", deltas, report)
+        print(f"  tenant{t}: {report.summary()}")
+
+    # mixed request stream
+    reqs = []
+    for i in range(args.requests):
+        tenant = f"tenant{i % args.tenants}"
+        prompt = np.asarray(jax.random.randint(jax.random.fold_in(rng, i), (8,), 0, cfg.vocab))
+        reqs.append((tenant, prompt))
+
+    t0 = time.time()
+    outs = eng.serve_batch(reqs, max_new_tokens=8)
+    dt = time.time() - t0
+    print(f"served {len(reqs)} requests across {args.tenants} tenants "
+          f"in {dt:.1f}s (CPU, incl. jit)")
+
+    # different tenants produce different generations for the same prompt
+    same_prompt = reqs[0][1]
+    gens = {t: eng.generate(f"tenant{t}", same_prompt[None], max_new_tokens=8)[0]
+            for t in range(min(args.tenants, 3))}
+    uniq = {tuple(g.tolist()) for g in gens.values()}
+    print(f"distinct generations for one prompt across tenants: {len(uniq)}/{len(gens)}")
+
+    rep = eng.memory_report()
+    n = rep["n_tenants"]
+    print(f"memory ledger: base {rep['base_bytes'] / 1e6:.1f}MB + "
+          f"{n} deltas {rep['delta_bytes_total'] / 1e6:.2f}MB  "
+          f"vs naive {n + 1} full models "
+          f"{rep['base_bytes'] * (n + 1) / 1e6:.1f}MB  "
+          f"=> {(rep['base_bytes'] * (n + 1)) / (rep['base_bytes'] + rep['delta_bytes_total']):.1f}x saving")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""End-to-end driver: pretrain -> SFT -> DeltaDQ -> serve -> evaluate.
+
+The paper's whole lifecycle on one machine:
+ 1. pretrain a base LM (noise mixture + task format),
+ 2. fine-tune it on the Sort task (the "WizardMath" stand-in),
+ 3. compress the delta at several ratios incl. the paper's 128x flagship,
+ 4. serve base + tenants through the multi-tenant engine,
+ 5. report exact-match task accuracy per tenant and the memory ledger.
+
+    PYTHONPATH=src python examples/train_sft_delta.py            # ~5 min CPU
+    PYTHONPATH=src python examples/train_sft_delta.py --preset 100m --steps 300
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ArchConfig
+from repro.core import DeltaDQSpec, compress
+from repro.data import FormatOnlyTask, PretrainMixture, SortTask
+from repro.models import lm
+from repro.optim import adamw, schedule
+from repro.optim.adamw import AdamWConfig
+from repro.serve import Engine
+from repro.train import make_train_step
+from repro.utils import tree_params
+
+PRESETS = {
+    "3m": ArchConfig(name="sft-3m", family="dense", n_layers=4, d_model=128,
+                     n_heads=4, n_kv=2, head_dim=32, d_ff=256, vocab=64,
+                     tie_embeddings=True),
+    "25m": ArchConfig(name="sft-25m", family="dense", n_layers=8, d_model=384,
+                      n_heads=8, n_kv=4, head_dim=48, d_ff=1024, vocab=512,
+                      tie_embeddings=True),
+    "100m": ArchConfig(name="sft-100m", family="dense", n_layers=12, d_model=768,
+                       n_heads=12, n_kv=4, head_dim=64, d_ff=2048, vocab=4096,
+                       tie_embeddings=True),
+}
+
+
+def train(cfg, params, data, steps, lr, label):
+    opt = adamw.init(params)
+    opt_cfg = AdamWConfig(lr=lr, weight_decay=0.0,
+                          schedule=schedule.cosine_with_warmup(steps // 10 + 1, steps))
+    step = jax.jit(make_train_step(cfg, opt_cfg))
+    t0 = time.time()
+    m = {}
+    for i in range(steps):
+        params, opt, m = step(params, opt, data.batch_at(i), jax.random.PRNGKey(i))
+        if i % max(steps // 5, 1) == 0:
+            print(f"  [{label}] step {i:4d} loss {float(m['loss']):.4f}")
+    print(f"  [{label}] done in {time.time() - t0:.0f}s, final loss {float(m['loss']):.4f}")
+    return params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="3m", choices=sorted(PRESETS))
+    ap.add_argument("--steps", type=int, default=None)
+    args = ap.parse_args()
+    cfg = PRESETS[args.preset]
+    n_digits, seq = 6, 32
+    steps = args.steps or {"3m": 250, "25m": 300, "100m": 300}[args.preset]
+    print(f"arch={cfg.name}: {tree_params(lm.param_specs(cfg)) / 1e6:.1f}M params")
+
+    rng = jax.random.PRNGKey(0)
+    base = lm.init_params(cfg, rng)
+    print("1) pretraining base ...")
+    base = train(cfg, base, PretrainMixture(cfg.vocab, seq, 32), steps // 3, 5e-3, "pretrain")
+    base = train(cfg, base, FormatOnlyTask(cfg.vocab, seq, 32, n_digits=n_digits),
+                 steps, 3e-3, "format")
+    task = SortTask(cfg.vocab, seq, 32, n_digits=n_digits, seed=1)
+    print("2) supervised fine-tuning ...")
+    ft = train(cfg, base, task, steps, 1e-3, "sft")
+
+    print("3) DeltaDQ compression ...")
+    eng = Engine(cfg, base, max_seq=seq + n_digits + 2)
+    tenants = {
+        "16x": DeltaDQSpec(alpha=8.0, k_bits=8, m=1, h_g=16),
+        "64x": DeltaDQSpec(alpha=8.0, k_bits=4, m=4, h_g=16),
+        "128x": DeltaDQSpec(alpha=8.0, k_bits=4, m=8, h_g=16),
+    }
+    for name, spec in tenants.items():
+        deltas, report = compress(base, ft, spec)
+        eng.register_tenant(name, deltas, report)
+        print("  ", report.summary())
+
+    print("4) serving + evaluation ...")
+
+    def acc(tenant, engine=eng):
+        c = t = 0
+        for s in range(3):
+            prompts, targets = task.prompts_at(9000 + s)
+            gen = engine.generate(tenant, prompts, max_new_tokens=n_digits)
+            c += (gen[:, :n_digits] == targets).sum()
+            t += targets.size
+        return c / t
+
+    eng_ft = Engine(cfg, ft, max_seq=seq + n_digits + 2)
+    print(f"  fine-tuned (uncompressed): {acc(None, eng_ft):.3f}")
+    print(f"  raw base                 : {acc(None):.3f}")
+    for name in tenants:
+        print(f"  tenant {name:5s}            : {acc(name):.3f}")
+
+    rep = eng.memory_report()
+    print(f"5) memory: base={rep['base_bytes'] / 1e6:.1f}MB, "
+          f"{rep['n_tenants']} tenants={rep['delta_bytes_total'] / 1e6:.2f}MB total "
+          f"(vs {rep['n_tenants']} full copies "
+          f"{rep['base_bytes'] * rep['n_tenants'] / 1e6:.1f}MB)")
+
+
+if __name__ == "__main__":
+    main()

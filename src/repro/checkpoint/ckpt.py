@@ -1,0 +1,140 @@
+"""Checkpointing: sharded save/restore with elastic re-meshing.
+
+* One ``.npz`` per checkpoint holding every leaf by path + a msgpack
+  manifest (step, data cursor, RNG, mesh shape) — all state needed to
+  resume bit-exactly.
+* **Async save**: arrays are fetched to host synchronously (cheap), the
+  file write happens on a background thread; ``wait()`` fences before the
+  next save or exit.
+* **Elastic restore**: leaves are re-placed with ``jax.device_put`` against
+  whatever mesh/sharding the *new* job provides — a checkpoint written on a
+  (16,16) mesh restores onto (8,32), (2,16,16), or 1 CPU device unchanged.
+  This is the restart/elastic-rescale path of DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.utils import flatten_with_paths
+
+_MANIFEST = "manifest.json"
+_ARRAYS = "arrays.npz"
+
+
+class Checkpointer:
+    def __init__(self, directory: str):
+        self.directory = directory
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, state: Any, extra: Optional[dict] = None,
+             blocking: bool = True) -> str:
+        self.wait()
+        flat = flatten_with_paths(state)
+        host = {}
+        dtypes = {}
+        for k, v in flat.items():
+            if v is None:
+                continue
+            arr = np.asarray(jax.device_get(v))
+            # npz cannot round-trip ml_dtypes (bf16 etc.): store the raw bits
+            if arr.dtype.kind == "V" or not arr.dtype.isnative or \
+                    arr.dtype.name not in np.sctypeDict:
+                dtypes[k] = arr.dtype.name
+                arr = arr.view(np.dtype(f"u{arr.dtype.itemsize}"))
+            host[k] = arr
+        path = os.path.join(self.directory, f"step_{step:08d}")
+        manifest = {"step": step, "extra": extra or {},
+                    "leaves": sorted(host.keys()), "bit_dtypes": dtypes}
+
+        def write():
+            os.makedirs(path, exist_ok=True)
+            # atomic-ish: write to tmp then rename
+            with tempfile.NamedTemporaryFile(dir=path, delete=False, suffix=".tmp") as f:
+                np.savez(f, **host)
+                tmp = f.name
+            os.replace(tmp, os.path.join(path, _ARRAYS))
+            with open(os.path.join(path, _MANIFEST), "w") as f:
+                json.dump(manifest, f)
+
+        if blocking:
+            write()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+        return path
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # -- restore --------------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        steps = [int(d.split("_")[1]) for d in os.listdir(self.directory)
+                 if d.startswith("step_") and
+                 os.path.exists(os.path.join(self.directory, d, _MANIFEST))]
+        return max(steps) if steps else None
+
+    def restore(self, template: Any, step: Optional[int] = None,
+                shardings: Any = None) -> tuple[Any, dict]:
+        """Restore into the structure of ``template`` (arrays or SDS).
+
+        ``shardings``: optional pytree (same structure) of NamedSharding —
+        this is where elastic re-meshing happens: whatever mesh the new job
+        built, leaves are device_put against it.
+        """
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        path = os.path.join(self.directory, f"step_{step:08d}")
+        with open(os.path.join(path, _MANIFEST)) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(path, _ARRAYS))
+
+        flat_t = flatten_with_paths(template)
+        flat_s = flatten_with_paths(shardings) if shardings is not None else {}
+
+        bit_dtypes = manifest.get("bit_dtypes", {})
+        out = {}
+        for k, tmpl in flat_t.items():
+            if tmpl is None:
+                out[k] = None
+                continue
+            arr = data[k]
+            if k in bit_dtypes:
+                import ml_dtypes  # bundled with jax
+                arr = arr.view(np.dtype(bit_dtypes[k]))
+            sh = flat_s.get(k)
+            if sh is not None:
+                out[k] = jax.device_put(arr.astype(tmpl.dtype), sh)
+            else:
+                out[k] = jax.numpy.asarray(arr, dtype=tmpl.dtype)
+        restored = _unflatten_like(template, out)
+        return restored, manifest
+
+    def restore_manifest(self, step: Optional[int] = None) -> dict:
+        if step is None:
+            step = self.latest_step()
+        path = os.path.join(self.directory, f"step_{step:08d}")
+        with open(os.path.join(path, _MANIFEST)) as f:
+            return json.load(f)
+
+
+def _unflatten_like(template: Any, flat: dict, prefix: str = "") -> Any:
+    if isinstance(template, dict):
+        return {k: _unflatten_like(v, flat, f"{prefix}{k}/") for k, v in template.items()}
+    if isinstance(template, (list, tuple)):
+        vals = [_unflatten_like(v, flat, f"{prefix}{i}/") for i, v in enumerate(template)]
+        return type(template)(vals) if not hasattr(template, "_fields") else type(template)(*vals)
+    key = prefix[:-1]
+    return flat.get(key)

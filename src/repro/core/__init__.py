@@ -1,0 +1,51 @@
+"""DeltaDQ core: the paper's contribution as composable JAX modules."""
+from repro.core.apply import (
+    apply_linear,
+    apply_linear_batched,
+    delta_matmul,
+    dget,
+    dindex,
+    merge_delta,
+    none_like,
+    set_use_pallas,
+)
+from repro.core.compress import (
+    CompressionReport,
+    DeltaDQSpec,
+    compress,
+    compress_leaf,
+    decompress,
+    is_compressible,
+)
+from repro.core.dropout import (
+    bernoulli_dropout_dense,
+    groupwise_dropout_mask,
+    groupwise_dropout_pack,
+    rowwise_dropout_pack,
+)
+from repro.core.groupsearch import (
+    SearchResult,
+    attention_proxy_error,
+    candidate_group_sizes,
+    search_direct,
+    search_proxy,
+)
+from repro.core.pack import (
+    PackedDelta,
+    StoragePart,
+    decode_values,
+    from_storage_parts,
+    reconstruct_dense,
+    to_storage_parts,
+)
+from repro.core.quant import (
+    QuantParams,
+    compression_ratio,
+    dequantize,
+    pack_bits,
+    quantize,
+    storage_bits_per_value,
+    unpack_bits,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

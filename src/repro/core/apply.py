@@ -1,0 +1,99 @@
+"""Delta application — the paper's separate-computation scheme (§3.1, Fig. 3).
+
+Every linear site in the model zoo routes through :func:`apply_linear`:
+
+    y = x @ W_base            (+ x @ dequant(packed delta)   if delta given)
+
+On TPU hot paths the correction term is the Pallas ``delta_spmm`` kernel
+(scatter-to-dense in VMEM + MXU); under SPMD dry-runs and CPU tests the
+mathematically identical XLA fallback below is used (config
+``use_pallas_kernels``). Both share the pure-jnp oracle in
+``repro/kernels/ref.py`` for tests.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pack import PackedDelta, reconstruct_dense
+
+# Global switch flipped by serving/launch configs. The Pallas path only
+# lowers on real TPUs; everything else uses the XLA fallback.
+_USE_PALLAS = False
+
+
+def set_use_pallas(flag: bool) -> None:
+    global _USE_PALLAS
+    _USE_PALLAS = flag
+
+
+def delta_matmul(x: jnp.ndarray, d: PackedDelta) -> jnp.ndarray:
+    """x [..., h_in] @ dequant(delta) [h_in, h_out] -> [..., h_out]."""
+    if _USE_PALLAS and not d.stack_shape():
+        from repro.kernels import ops
+        return ops.delta_spmm(x, d)
+    dense = reconstruct_dense(d, dtype=x.dtype)
+    return x @ dense
+
+
+def apply_linear(x: jnp.ndarray, w: jnp.ndarray, d: Optional[PackedDelta] = None) -> jnp.ndarray:
+    """Base matmul plus (optionally) the tenant's delta correction."""
+    y = x @ w
+    if d is not None:
+        y = y + delta_matmul(x, d).astype(y.dtype)
+    return y
+
+
+def apply_linear_batched(x: jnp.ndarray, w: jnp.ndarray, d: Optional[PackedDelta] = None) -> jnp.ndarray:
+    """Batched over a leading stack dim (e.g. MoE experts):
+    x [E, ..., h_in], w [E, h_in, h_out], delta stacked [E, ...]."""
+    y = jnp.einsum("e...d,edf->e...f", x, w)
+    if d is not None:
+        dense = reconstruct_dense(d, dtype=x.dtype)  # [E, h_in, h_out]
+        y = y + jnp.einsum("e...d,edf->e...f", x, dense)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Delta-tree helpers: deltas mirror the params tree with None at
+# uncompressed leaves, so block code can slice them alongside params.
+# ---------------------------------------------------------------------------
+def none_like(params: Any) -> Any:
+    """A deltas pytree of all-None matching ``params``' dict structure."""
+    if isinstance(params, dict):
+        return {k: none_like(v) for k, v in params.items()}
+    return None
+
+
+def dget(deltas: Any, *keys: str) -> Any:
+    """None-safe nested lookup into a deltas tree."""
+    node = deltas
+    for k in keys:
+        if node is None:
+            return None
+        node = node.get(k) if isinstance(node, dict) else None
+    return node
+
+
+def dindex(deltas: Any, i) -> Any:
+    """Slice every PackedDelta in a deltas subtree at stacked-layer index i."""
+    if deltas is None:
+        return None
+    if isinstance(deltas, PackedDelta):
+        return deltas.index(i)
+    if isinstance(deltas, dict):
+        return {k: dindex(v, i) for k, v in deltas.items()}
+    return None
+
+
+def merge_delta(params: Any, deltas: Any) -> Any:
+    """Materialize fine-tuned params = base + dense(delta). (Eval/reference.)"""
+    if isinstance(params, dict):
+        return {k: merge_delta(v, deltas.get(k) if isinstance(deltas, dict) else None)
+                for k, v in params.items()}
+    if deltas is None:
+        return params
+    assert isinstance(deltas, PackedDelta)
+    return (params.astype(jnp.float32) + reconstruct_dense(deltas)).astype(params.dtype)

@@ -1,0 +1,89 @@
+"""Baseline delta-compression methods the paper compares against (§4.1).
+
+* ``magnitude`` — Han et al. 2015: keep the top-|w| fraction 1/alpha of the
+  delta, globally per tensor, no rescale.
+* ``dare`` — Yu et al. 2023: global Bernoulli dropout at keep-rate 1/alpha
+  with 1/keep-rate rescale (the paper's "random drop, whole tensor" point).
+* ``deltazip`` — Yao & Klimovic 2023 (lite): per-row magnitude sparsification
+  followed by 4-bit group-128 quantization. (Full DeltaZip uses SparseGPT's
+  Hessian-weighted updates; we implement the magnitude variant and note the
+  difference — it is the *stronger* baseline at low alpha per paper Table 1.)
+
+All return a **dense** compressed delta (same shape as the input) plus a
+bit count, so evaluation code can treat every method uniformly:
+``W_hat = W_base + compressed_delta``.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+
+def magnitude(rng, delta: jnp.ndarray, *, alpha: float, **_) -> jnp.ndarray:
+    n = delta.size
+    keep = max(int(n / alpha), 1)
+    flat = jnp.abs(delta.reshape(-1))
+    thresh = jax.lax.top_k(flat, keep)[0][-1]
+    return jnp.where(jnp.abs(delta) >= thresh, delta, 0.0)
+
+
+def dare(rng, delta: jnp.ndarray, *, alpha: float, **_) -> jnp.ndarray:
+    keep_rate = 1.0 / alpha
+    mask = jax.random.bernoulli(rng, keep_rate, delta.shape)
+    return jnp.where(mask, delta / keep_rate, 0.0)
+
+
+def _group_quant(x: jnp.ndarray, k_bits: int, group: int = 128) -> jnp.ndarray:
+    """Per-group (along h_in) uniform quant-dequant, GPTQ-style granularity."""
+    h_in, h_out = x.shape[-2], x.shape[-1]
+    g = max(min(group, h_in), 1)
+    while h_in % g:
+        g //= 2
+    xg = x.reshape(*x.shape[:-2], h_in // g, g, h_out)
+    lo = xg.min(axis=-2, keepdims=True)
+    hi = xg.max(axis=-2, keepdims=True)
+    s = jnp.maximum(hi - lo, 1e-12) / (2**k_bits - 1)
+    q = jnp.clip(jnp.round((xg - lo) / s), 0, 2**k_bits - 1)
+    return (q * s + lo).reshape(x.shape)
+
+
+def _colwise_thresh(mag: jnp.ndarray, keep: int) -> jnp.ndarray:
+    """Per-output-column threshold keeping `keep` largest along h_in."""
+    srt = jnp.sort(mag, axis=-2)  # ascending
+    return jnp.take(srt, mag.shape[-2] - keep, axis=-2)[..., None, :]
+
+
+def deltazip(rng, delta: jnp.ndarray, *, alpha: float, k_bits: int = 4, **_) -> jnp.ndarray:
+    # Total budget alpha = alpha_sparse * (16 / k_bits): pick the sparsity so
+    # that sparsification times 4-bit quantization hits the target ratio.
+    alpha_sparse = max(alpha * k_bits / 16.0, 1.0)
+    keep = max(int(round(delta.shape[-2] / alpha_sparse)), 1)
+    if keep >= delta.shape[-2]:
+        sparse = delta
+    else:
+        mag = jnp.abs(delta)
+        sparse = jnp.where(mag >= _colwise_thresh(mag, keep), delta, 0.0)
+    return jnp.where(sparse != 0, _group_quant(sparse, k_bits), 0.0)
+
+
+METHODS: dict[str, Callable] = {
+    "magnitude": magnitude,
+    "dare": dare,
+    "deltazip": deltazip,
+}
+
+
+def method_bits(name: str, delta_shape, *, alpha: float, k_bits: int = 4) -> float:
+    """Stored value-bits under each method (paper convention, for reports)."""
+    import numpy as np
+    n = float(np.prod(delta_shape))
+    if name in ("magnitude", "dare"):
+        return 16.0 * n / alpha
+    if name == "deltazip":
+        alpha_sparse = max(alpha * k_bits / 16.0, 1.0)
+        return k_bits * n / alpha_sparse
+    raise KeyError(name)

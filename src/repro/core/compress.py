@@ -1,0 +1,202 @@
+"""End-to-end DeltaDQ compression pipeline over a whole params tree.
+
+    spec = DeltaDQSpec(alpha=8, k_bits=4, m=8)         # 128x
+    deltas, report = compress(base_params, ft_params, spec, rng)
+
+Selection rule: 2-D (or expert-stacked 3-D) projection matrices are
+compressed; embeddings, unembeddings, norms, biases, convs, routers and
+SSM/LRU per-channel params stay dense per BitDelta/DeltaZip convention
+(DESIGN.md §4). Uncompressed leaves' deltas are carried dense in the
+report so nothing is silently dropped.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant
+from repro.core.dropout import groupwise_dropout_pack
+from repro.core.pack import PackedDelta
+from repro.utils import map_with_paths
+
+_EXCLUDE_TOKENS = (
+    "embed", "unembed", "norm", "ln1", "ln2", "ln", "scale", "bias",
+    "conv", "a_param", "dt_bias", "a_log", "d_skip", "gate_attn",
+    "gate_mlp", "router", "q_norm", "k_norm",
+)
+
+
+def is_compressible(path: str, leaf) -> bool:
+    if not hasattr(leaf, "ndim") or leaf.ndim < 2:
+        return False
+    low = path.lower()
+    if any(t in low.split("/") or t in low for t in _EXCLUDE_TOKENS):
+        return False
+    h_in, h_out = leaf.shape[-2], leaf.shape[-1]
+    return h_in >= 16 and h_out >= 8
+
+
+@dataclass(frozen=True)
+class DeltaDQSpec:
+    alpha: float = 8.0            # dropout compression (keep-rate 1/alpha)
+    k_bits: Optional[int] = None  # None -> dropout only (paper's 2x..8x rows)
+    m: int = 1                    # separate-quantization parts
+    h_g: Optional[int] = None     # None -> use h_in (row-wise); search sets it
+    seed: int = 0
+
+    def ratio(self) -> float:
+        return quant.compression_ratio(self.alpha, self.k_bits, self.m)
+
+
+@dataclass
+class CompressionReport:
+    spec: DeltaDQSpec
+    n_compressed: int = 0
+    n_dense: int = 0
+    dense_delta_bits: float = 0.0      # bits of the raw bf16 delta we compressed
+    packed_value_bits: float = 0.0     # paper convention (values only)
+    packed_total_bits: float = 0.0     # honest: + indices
+    skipped_paths: list = field(default_factory=list)
+
+    @property
+    def ratio_paper(self) -> float:
+        return self.dense_delta_bits / max(self.packed_value_bits, 1e-9)
+
+    @property
+    def ratio_honest(self) -> float:
+        return self.dense_delta_bits / max(self.packed_total_bits, 1e-9)
+
+    def summary(self) -> str:
+        return (f"DeltaDQ(alpha={self.spec.alpha}, h_g={self.spec.h_g}, "
+                f"k={self.spec.k_bits}, m={self.spec.m}): "
+                f"{self.n_compressed} tensors packed, {self.n_dense} left dense; "
+                f"ratio paper-convention={self.ratio_paper:.1f}x "
+                f"honest(+indices)={self.ratio_honest:.1f}x "
+                f"(spec target {self.spec.ratio():.0f}x)")
+
+
+def _pick_hg(h_in: int, spec: DeltaDQSpec) -> int:
+    if spec.h_g is None:
+        return h_in
+    # clamp to a divisor of h_in: largest power-of-two h_g' <= h_g dividing h_in
+    hg = min(spec.h_g, h_in)
+    while h_in % hg or hg < spec.alpha:
+        hg //= 2
+        if hg < 1:
+            raise ValueError(f"no valid group size <= {spec.h_g} for h_in={h_in}")
+    return int(hg)
+
+
+def compress_leaf(rng, base_leaf, ft_leaf, spec: DeltaDQSpec) -> PackedDelta:
+    """Compress one (possibly expert-stacked) weight's delta."""
+    delta = ft_leaf.astype(jnp.float32) - base_leaf.astype(jnp.float32)
+    h_in = delta.shape[-2]
+    hg = _pick_hg(h_in, spec)
+    return groupwise_dropout_pack(rng, delta, h_g=hg, alpha=spec.alpha,
+                                  k_bits=spec.k_bits, m=spec.m)
+
+
+def compress(base_params: Any, ft_params: Any, spec: DeltaDQSpec,
+             rng: Optional[jax.Array] = None) -> tuple[Any, CompressionReport]:
+    """Compress every eligible delta leaf; returns (deltas tree, report)."""
+    if rng is None:
+        rng = jax.random.PRNGKey(spec.seed)
+    report = CompressionReport(spec=spec)
+
+    def fn(path: str, b, f):
+        if not is_compressible(path, b):
+            report.n_dense += 1
+            report.skipped_paths.append(path)
+            return None
+        leaf_rng = jax.random.fold_in(rng, hash(path) & 0x7FFFFFFF)
+        d = compress_leaf(leaf_rng, b, f, spec)
+        report.n_compressed += 1
+        stack = int(np.prod(d.stack_shape())) if d.stack_shape() else 1
+        report.dense_delta_bits += 16.0 * d.h_in * d.h_out * stack
+        report.packed_value_bits += d.value_bits() * stack
+        report.packed_total_bits += (d.value_bits() + d.index_bits()) * stack
+        return d
+
+    deltas = map_with_paths(fn, base_params, ft_params)
+    return deltas, report
+
+
+def decompress(base_params: Any, deltas: Any) -> Any:
+    """Reconstruct approximate fine-tuned params (reference/eval path)."""
+    from repro.core.apply import merge_delta
+    return merge_delta(base_params, deltas)
+
+
+# ---------------------------------------------------------------------------
+# Shape-only twins for the multi-pod dry-run (no compression computed)
+# ---------------------------------------------------------------------------
+def delta_leaf_spec(leaf_spec, spec: DeltaDQSpec) -> PackedDelta:
+    """PackedDelta of ShapeDtypeStructs for one weight's compressed delta."""
+    from repro.core.quant import packed_len
+
+    shape = leaf_spec.shape
+    lead, (h_in, h_out) = shape[:-2], shape[-2:]
+    hg = _pick_hg(h_in, spec)
+    keep = int(round(hg / spec.alpha))
+    G = h_in // hg
+    idx_dtype = jnp.uint8 if hg <= 256 else jnp.int32
+    if spec.k_bits is None:
+        codes = jax.ShapeDtypeStruct((*lead, G, keep, h_out), jnp.float32)
+        scale = jax.ShapeDtypeStruct(lead, jnp.float32)
+        zero = jax.ShapeDtypeStruct(lead, jnp.int32)
+    else:
+        kp = packed_len(keep, spec.k_bits)
+        codes = jax.ShapeDtypeStruct((*lead, G, kp, h_out), jnp.uint8)
+        scale = jax.ShapeDtypeStruct(lead, jnp.float32)
+        zero = jax.ShapeDtypeStruct(lead, jnp.int32)
+    return PackedDelta(
+        idx=jax.ShapeDtypeStruct((*lead, G, keep, h_out), idx_dtype),
+        codes=codes, scale=scale, zero=zero,
+        h_in=h_in, h_out=h_out, h_g=hg, keep=keep,
+        alpha=spec.alpha, k_bits=spec.k_bits, m=spec.m,
+    )
+
+
+def delta_specs(param_specs: Any, spec: DeltaDQSpec) -> Any:
+    """ShapeDtypeStruct deltas tree mirroring a param-specs tree."""
+
+    def fn(path, leaf):
+        if not is_compressible(path, leaf):
+            return None
+        return delta_leaf_spec(leaf, spec)
+
+    return map_with_paths(fn, param_specs)
+
+
+def delta_axes(param_specs: Any, param_axes: Any, spec: DeltaDQSpec,
+               model_axis_size: int) -> Any:
+    """Logical-axes tree matching :func:`delta_specs` structure.
+
+    idx/codes [lead..., G, K, O]: O inherits the base weight's output axis;
+    the G (group) axis inherits the input axis only when group boundaries
+    align with the shard boundaries (G divisible by the mesh axis) — else
+    it is replicated, which is cheap because deltas are tiny (the paper's
+    point). scale/zero inherit the lead axes.
+    """
+
+    def fn(path, leaf, ax):
+        if not is_compressible(path, leaf):
+            return None
+        d = delta_leaf_spec(leaf, spec)
+        lead_ax = tuple(ax[:-2])
+        in_ax, out_ax = ax[-2], ax[-1]
+        g_ax = in_ax if d.n_groups % max(model_axis_size, 1) == 0 else None
+        arr_ax = (*lead_ax, g_ax, None, out_ax)
+        return PackedDelta(
+            idx=arr_ax, codes=arr_ax, scale=lead_ax, zero=lead_ax,
+            h_in=d.h_in, h_out=d.h_out, h_g=d.h_g, keep=d.keep,
+            alpha=d.alpha, k_bits=d.k_bits, m=d.m,
+        )
+
+    return map_with_paths(fn, param_specs, param_axes,
+                          is_leaf=lambda x: hasattr(x, "shape"))

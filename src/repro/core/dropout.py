@@ -1,0 +1,100 @@
+"""Group-wise Dropout (paper §3.3), exact-count structured variant.
+
+The paper draws a Bernoulli mask per group (keep-rate 1/alpha in
+expectation) and rescales survivors by alpha. We keep **exactly**
+``h_g / alpha`` uniformly-random elements per group — same estimator, but
+the fixed per-group count makes the result *structured* sparsity with a
+dense packed layout (DESIGN.md §3). ``tests/test_core_dropout.py`` checks
+the layer-wise l2 error matches the Bernoulli variant statistically.
+
+Groups run along the contraction dim (h_in), within each output column —
+this is the paper's "row dimension" in its [h_out, h_in] convention and is
+what makes the Balanced-Intermediate-Results argument apply: each survivor
+stands in for h_g/keep near-identical intermediate products.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.pack import PackedDelta
+
+
+def _check(h_in: int, h_g: int, alpha: float):
+    if h_in % h_g:
+        raise ValueError(f"h_g={h_g} must divide h_in={h_in}")
+    keep = int(round(h_g / alpha))
+    if keep < 1:
+        raise ValueError(f"alpha={alpha} too large for h_g={h_g}")
+    return keep
+
+
+def groupwise_dropout_mask(rng, h_in: int, h_out: int, h_g: int, alpha: float) -> jnp.ndarray:
+    """Bernoulli-free exact mask [h_in, h_out]; True = kept. (Reference.)"""
+    keep = _check(h_in, h_g, alpha)
+    G = h_in // h_g
+    u = jax.random.uniform(rng, (G, h_g, h_out))
+    ranks = jnp.argsort(jnp.argsort(u, axis=1), axis=1)
+    return (ranks < keep).reshape(h_in, h_out)
+
+
+def groupwise_dropout_pack(
+    rng,
+    delta: jnp.ndarray,
+    *,
+    h_g: int,
+    alpha: float,
+    k_bits: int | None = None,
+    m: int = 1,
+) -> PackedDelta:
+    """Compress one [h_in, h_out] delta: dropout -> rescale -> quantize -> pack.
+
+    The alpha rescale is folded into the stored values (equivalently into the
+    quantization scale), so reconstruction needs no extra multiply.
+    """
+    h_in, h_out = delta.shape[-2:]
+    keep = _check(h_in, h_g, alpha)
+    G = h_in // h_g
+    grouped = delta.reshape(*delta.shape[:-2], G, h_g, h_out).astype(jnp.float32)
+
+    u = jax.random.uniform(rng, grouped.shape)
+    # exact-count uniform subset per (group, column): take the `keep`
+    # positions with the smallest random keys, then sort indices so the
+    # packed layout is ordered (helps the kernel's sequential scatter).
+    sel = jnp.argsort(u, axis=-2)[..., :keep, :]
+    sel = jnp.sort(sel, axis=-2)
+    vals = jnp.take_along_axis(grouped, sel, axis=-2) * jnp.float32(alpha)
+
+    if k_bits is None:
+        codes = vals
+        scale = jnp.float32(1.0)
+        zero = jnp.int32(0)
+    else:
+        # per-matrix scales: leading stack dims (layers/experts) quantize
+        # independently, matching the paper's per-tensor granularity
+        q, qp = quant.quantize(vals, k_bits, lead_dims=vals.ndim - 3)
+        codes = quant.pack_bits(q, quant.pack_width(k_bits), axis=q.ndim - 2)
+        scale, zero = qp.scale, qp.zero
+
+    idx_dtype = jnp.uint8 if h_g <= 256 else jnp.int32
+    return PackedDelta(
+        idx=sel.astype(idx_dtype), codes=codes, scale=scale, zero=zero,
+        h_in=h_in, h_out=h_out, h_g=h_g, keep=keep,
+        alpha=float(alpha), k_bits=k_bits, m=m,
+    )
+
+
+def rowwise_dropout_pack(rng, delta: jnp.ndarray, *, alpha: float,
+                         k_bits: int | None = None, m: int = 1) -> PackedDelta:
+    """Paper's Row-wise Dropout = group size h_g == h_in (one group per row)."""
+    return groupwise_dropout_pack(rng, delta, h_g=delta.shape[-2], alpha=alpha,
+                                  k_bits=k_bits, m=m)
+
+
+def bernoulli_dropout_dense(rng, delta: jnp.ndarray, *, alpha: float) -> jnp.ndarray:
+    """Paper's original (expected-count) formulation, dense output. Used to
+    validate that the exact-count variant is statistically equivalent."""
+    keep_rate = 1.0 / alpha
+    mask = jax.random.bernoulli(rng, keep_rate, delta.shape)
+    return jnp.where(mask, delta * alpha, 0.0)

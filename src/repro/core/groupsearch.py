@@ -1,0 +1,119 @@
+"""Optimal group-size search (paper §3.3, Table 4).
+
+Candidates: h_g in {alpha, alpha*2, alpha*4, ..., h_in}. Two selectors:
+
+* ``search_direct``  — compress the whole model at each candidate and score
+  the true downstream objective (eval loss / accuracy). Expensive.
+* ``search_proxy``   — the paper's proxy: compress only the first layer's
+  Q/K projections and score the attention-matrix error
+  ``||Q1 K1^T - Q1_hat K1_hat^T||^2`` on ~1% calibration data (Eq. 5).
+  All layers share one h_g*; shallow layers are most compression-sensitive,
+  so layer 1 is the probe.
+
+Attention-free archs (DESIGN.md §4): mamba2 uses the SSD score matrix
+``C B^T`` of layer 1 as the proxy feature; recurrentgemma probes its first
+*attention* layer (index 2 in the rec,rec,attn pattern).
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compress import DeltaDQSpec
+from repro.core.dropout import groupwise_dropout_pack
+from repro.core.pack import reconstruct_dense
+
+
+def candidate_group_sizes(h_in: int, alpha: float) -> list[int]:
+    out, hg = [], int(alpha)
+    while hg <= h_in:
+        if h_in % hg == 0:
+            out.append(hg)
+        hg *= 2
+    if not out or out[-1] != h_in:
+        out.append(h_in)
+    return out
+
+
+def attention_proxy_error(x: jnp.ndarray,
+                          wq_b: jnp.ndarray, wk_b: jnp.ndarray,
+                          wq_f: jnp.ndarray, wk_f: jnp.ndarray,
+                          h_g: int, spec: DeltaDQSpec, rng,
+                          head_dim: Optional[int] = None) -> jnp.ndarray:
+    """||Q K^T - Qhat Khat^T||^2 with layer-1 deltas compressed at h_g.
+
+    GQA-aware: when q_dim != kv_dim (or head_dim is given), scores are
+    computed per head with KV heads broadcast to their query groups.
+    """
+    dq = (wq_f - wq_b).astype(jnp.float32)
+    dk = (wk_f - wk_b).astype(jnp.float32)
+    r1, r2 = jax.random.split(rng)
+    pq = groupwise_dropout_pack(r1, dq, h_g=h_g, alpha=spec.alpha, k_bits=spec.k_bits, m=spec.m)
+    pk = groupwise_dropout_pack(r2, dk, h_g=h_g, alpha=spec.alpha, k_bits=spec.k_bits, m=spec.m)
+    x = x.astype(jnp.float32)
+    q = x @ (wq_b + dq)
+    k = x @ (wk_b + dk)
+    qh = x @ (wq_b + reconstruct_dense(pq))
+    kh = x @ (wk_b + reconstruct_dense(pk))
+
+    q_dim, kv_dim = q.shape[-1], k.shape[-1]
+    if head_dim is None and q_dim != kv_dim:
+        head_dim = math.gcd(q_dim, kv_dim)
+
+    def scores(qm, km):
+        if head_dim is None:
+            return jnp.einsum("td,sd->ts", qm, km)
+        t = qm.shape[0]
+        qs = qm.reshape(t, q_dim // head_dim, head_dim)
+        ks = km.reshape(t, kv_dim // head_dim, head_dim)
+        ks = jnp.repeat(ks, q_dim // kv_dim, axis=1)
+        return jnp.einsum("thd,shd->hts", qs, ks)
+
+    return jnp.sum((scores(q, k) - scores(qh, kh)) ** 2)
+
+
+@dataclass
+class SearchResult:
+    h_g_star: int
+    errors: dict           # h_g -> score (proxy error or direct loss)
+    seconds: float
+    method: str
+
+
+def search_proxy(x_calib: jnp.ndarray,
+                 wq_b, wk_b, wq_f, wk_f,
+                 spec: DeltaDQSpec,
+                 rng=None,
+                 candidates: Sequence[int] | None = None) -> SearchResult:
+    """Pick h_g* minimizing the attention proxy error on calibration input.
+
+    ``x_calib``: [t, d_model] layer-1 inputs for ~1% of the eval set.
+    """
+    if rng is None:
+        rng = jax.random.PRNGKey(spec.seed)
+    h_in = wq_b.shape[0]
+    cands = list(candidates) if candidates else candidate_group_sizes(h_in, spec.alpha)
+    t0 = time.perf_counter()
+    errs = {}
+    for hg in cands:
+        errs[hg] = float(attention_proxy_error(x_calib, wq_b, wk_b, wq_f, wk_f,
+                                               hg, spec, jax.random.fold_in(rng, hg)))
+    best = min(errs, key=errs.get)
+    return SearchResult(best, errs, time.perf_counter() - t0, "proxy")
+
+
+def search_direct(score_fn: Callable[[int], float],
+                  h_in: int, spec: DeltaDQSpec,
+                  candidates: Sequence[int] | None = None) -> SearchResult:
+    """Direct search: ``score_fn(h_g)`` returns a loss to minimize (e.g. full
+    eval loss of the compressed model). The paper's expensive reference."""
+    cands = list(candidates) if candidates else candidate_group_sizes(h_in, spec.alpha)
+    t0 = time.perf_counter()
+    errs = {hg: float(score_fn(hg)) for hg in cands}
+    best = min(errs, key=errs.get)
+    return SearchResult(best, errs, time.perf_counter() - t0, "direct")

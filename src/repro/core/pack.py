@@ -1,0 +1,217 @@
+"""Packed delta-weight formats.
+
+Two layouts (DESIGN.md §3 — hardware adaptation):
+
+* :class:`PackedDelta` — the **runtime** layout. Group-wise dropout with an
+  exact per-group keep count yields *structured* sparsity: every
+  (group, output-column) stores a fixed-shape ``[keep]`` vector of local
+  indices (log2 h_g bits) and k-bit codes (bit-packed). Dense, tileable,
+  TPU-friendly; this is what kernels and the XLA fallback consume.
+
+* :func:`to_storage_parts` — the **paper-faithful storage** layout for
+  Separate Quantization: m per-part ragged lists (CSR-style) whose codes
+  need only k - log2(m) bits because the part id is positional. Used for
+  checkpointing compressed deltas and for the Fig. 7 memory accounting.
+
+Weights are stored as ``w[h_in, h_out]`` (y = x @ w); the paper's rows
+(h_out) are our columns, and dropout groups run along h_in — the matrix-
+computation (contraction) dimension, as in the paper.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class PackedDelta:
+    """Structured-sparse, quantized delta for one [h_in, h_out] weight.
+
+    Array fields may carry extra *leading* stack dims (layers, experts).
+      idx:   local in-group indices, int dtype,   [..., G, K, O]
+      codes: bit-packed k-bit codes, uint8,       [..., G, Kp, O]   (Kp = packed_len(K,k))
+             or float values                      [..., G, K, O]    when k_bits is None
+      scale, zero: per-tensor quant params (scalars; stacked if leading dims)
+    Static meta: h_in, h_out, h_g, keep, alpha, k_bits, m.
+    """
+    idx: jnp.ndarray
+    codes: jnp.ndarray
+    scale: Any
+    zero: Any
+    h_in: int
+    h_out: int
+    h_g: int
+    keep: int
+    alpha: float
+    k_bits: int | None
+    m: int
+
+    # -- pytree plumbing ---------------------------------------------------
+    def tree_flatten(self):
+        children = (self.idx, self.codes, self.scale, self.zero)
+        aux = (self.h_in, self.h_out, self.h_g, self.keep, self.alpha, self.k_bits, self.m)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    # -- derived -----------------------------------------------------------
+    @property
+    def n_groups(self) -> int:
+        return self.h_in // self.h_g
+
+    @property
+    def nnz(self) -> int:
+        return self.n_groups * self.keep * self.h_out
+
+    def stack_shape(self) -> tuple[int, ...]:
+        return tuple(self.idx.shape[:-3])
+
+    def index(self, i) -> "PackedDelta":
+        """Slice one element off the leading stack dim (for layer loops)."""
+        return PackedDelta(self.idx[i], self.codes[i],
+                           self.scale[i] if jnp.ndim(self.scale) else self.scale,
+                           self.zero[i] if jnp.ndim(self.zero) else self.zero,
+                           self.h_in, self.h_out, self.h_g, self.keep,
+                           self.alpha, self.k_bits, self.m)
+
+    # -- storage accounting (bits; paper conventions in quant.py) ----------
+    def value_bits(self) -> float:
+        if self.k_bits is None:
+            return 16.0 * self.nnz
+        return quant.storage_bits_per_value(self.k_bits, self.m) * self.nnz
+
+    def index_bits(self) -> float:
+        return math.log2(max(self.h_g, 2)) * self.nnz
+
+    def total_bits(self, include_indices: bool = True) -> float:
+        """Storage bits for the whole (possibly stacked) delta."""
+        stack = int(np.prod(self.stack_shape())) if self.stack_shape() else 1
+        per_matrix = self.value_bits() + (self.index_bits() if include_indices else 0.0)
+        return per_matrix * stack
+
+
+def decode_values(d: PackedDelta) -> jnp.ndarray:
+    """Return dequantized kept values, f32 [..., G, K, O]."""
+    if d.k_bits is None:
+        return d.codes.astype(jnp.float32)
+    q = quant.unpack_bits(d.codes, quant.pack_width(d.k_bits), d.keep,
+                          axis=d.codes.ndim - 2)
+    z = jnp.asarray(d.zero, jnp.float32)
+    s = jnp.asarray(d.scale, jnp.float32)
+    if jnp.ndim(z):  # stacked scalars -> broadcast over trailing (G,K,O)
+        z = z.reshape(z.shape + (1, 1, 1))
+        s = s.reshape(s.shape + (1, 1, 1))
+    return (q.astype(jnp.float32) - z) * s
+
+
+def reconstruct_dense(d: PackedDelta, dtype=jnp.float32) -> jnp.ndarray:
+    """Scatter the packed delta back to a dense [..., h_in, h_out] matrix.
+
+    This is the XLA-fallback analogue of the Pallas kernel's in-VMEM
+    scatter; on TPU hot paths the kernel does this per-tile in VMEM instead.
+    """
+    vals = decode_values(d) * jnp.float32(1.0)  # alpha already folded at pack time
+    idx = d.idx.astype(jnp.int32)
+    lead = vals.shape[:-3]
+    G, K, O = vals.shape[-3:]
+    vals = vals.reshape((-1, G, K, O))
+    idx = idx.reshape((-1, G, K, O))
+
+    def one(v, ix):
+        dense = jnp.zeros((G, d.h_g, O), jnp.float32)
+        gi = jnp.arange(G)[:, None, None]
+        oi = jnp.arange(O)[None, None, :]
+        dense = dense.at[gi, ix, oi].add(v)
+        return dense.reshape(d.h_in, d.h_out)
+
+    out = jax.vmap(one)(vals, idx)
+    out = out.reshape(lead + (d.h_in, d.h_out)) if lead else out[0]
+    return out.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Paper-faithful m-part CSR storage (numpy, offline)
+# ---------------------------------------------------------------------------
+@dataclass
+class StoragePart:
+    """One of the m Separate-Quantization parts: a group-CSR sparse matrix."""
+    part: int                 # 1..m
+    group_offsets: np.ndarray  # int64 [G*O + 1] prefix sums of per-(g,o) counts
+    local_idx: np.ndarray      # per-element local index within group
+    low_codes: np.ndarray      # (k - log2 m)-bit stored codes (uint8)
+
+    def storage_bits(self, k_bits: int, m: int, h_g: int) -> float:
+        vb = quant.storage_bits_per_value(k_bits, m) * len(self.low_codes)
+        ib = math.log2(max(h_g, 2)) * len(self.local_idx)
+        ob = 64.0 * len(self.group_offsets)
+        return vb + ib + ob
+
+
+def to_storage_parts(d: PackedDelta) -> list[StoragePart]:
+    """Decompose a (non-stacked) PackedDelta into m paper-faithful parts."""
+    assert d.k_bits is not None, "separate quantization requires quantized codes"
+    assert not d.stack_shape(), "storage layer operates per-matrix"
+    q = np.asarray(quant.unpack_bits(d.codes, quant.pack_width(d.k_bits), d.keep,
+                                     axis=d.codes.ndim - 2))
+    idx = np.asarray(d.idx)
+    G, K, O = q.shape
+    width = (2**d.k_bits) // d.m
+    pid = q // width
+    low = (q - pid * width).astype(np.uint8)
+    # order elements by (g, o) then k so group offsets are well defined
+    qf = q.transpose(0, 2, 1).reshape(G * O, K)
+    pidf = pid.transpose(0, 2, 1).reshape(G * O, K)
+    lowf = low.transpose(0, 2, 1).reshape(G * O, K)
+    idxf = idx.transpose(0, 2, 1).reshape(G * O, K)
+    parts = []
+    for j in range(d.m):
+        sel = pidf == j
+        counts = sel.sum(axis=1)
+        offs = np.zeros(G * O + 1, np.int64)
+        np.cumsum(counts, out=offs[1:])
+        parts.append(StoragePart(
+            part=j + 1,
+            group_offsets=offs,
+            local_idx=idxf[sel].astype(np.uint16),
+            low_codes=lowf[sel],
+        ))
+    return parts
+
+
+def from_storage_parts(parts: list[StoragePart], *, h_in: int, h_out: int, h_g: int,
+                       keep: int, alpha: float, k_bits: int, scale, zero) -> PackedDelta:
+    """Reassemble the runtime layout from m storage parts (load path)."""
+    m = len(parts)
+    G = h_in // h_g
+    width = (2**k_bits) // m
+    q = np.zeros((G * h_out, keep), np.int32)
+    ix = np.zeros((G * h_out, keep), np.int32)
+    fill = np.zeros(G * h_out, np.int64)  # next free slot per (group, col) row
+    for j, p in enumerate(parts):
+        counts = np.diff(p.group_offsets)
+        rows = np.repeat(np.arange(G * h_out), counts)
+        within = np.arange(len(rows)) - np.repeat(p.group_offsets[:-1], counts)
+        slot = fill[rows] + within
+        q[rows, slot] = p.low_codes.astype(np.int32) + j * width
+        ix[rows, slot] = p.local_idx
+        fill += counts
+    q = q.reshape(G, h_out, keep).transpose(0, 2, 1)
+    ix = ix.reshape(G, h_out, keep).transpose(0, 2, 1)
+    codes = quant.pack_bits(jnp.asarray(q), quant.pack_width(k_bits), axis=1)
+    idx_dtype = jnp.uint8 if h_g <= 256 else jnp.int32
+    return PackedDelta(
+        idx=jnp.asarray(ix, idx_dtype), codes=codes,
+        scale=jnp.float32(scale), zero=jnp.int32(zero),
+        h_in=h_in, h_out=h_out, h_g=h_g, keep=keep,
+        alpha=alpha, k_bits=k_bits, m=m,
+    )

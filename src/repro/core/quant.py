@@ -1,0 +1,161 @@
+"""Uniform quantization + the paper's Separate Quantization (§3.4).
+
+Quantizer (paper Eqs. 6-8, per-tensor granularity):
+
+    q = clip(round(dW / s) + z, 0, 2^k - 1)
+    s = (max(dW) - min(dW)) / (2^k - 1)
+    z = round(-min(dW) / s)
+
+Separate Quantization (Eqs. 9-11) then partitions the k-bit codes into m
+parts by value range; part j stores codes offset by o_j = -(2^k/m)(j-1) so
+each part needs only k - log2(m) storage bits. Parts have disjoint support,
+so the decomposition is exactly invertible: it changes *storage bits*, not
+code resolution. Accuracy therefore depends on k alone; the compression
+ratio becomes alpha * 16 / (k - log2 m)  (paper's value-bits convention).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class QuantParams(NamedTuple):
+    scale: jnp.ndarray   # f32 scalar
+    zero: jnp.ndarray    # int32 scalar
+    k_bits: int
+
+
+def quantize(x: jnp.ndarray, k_bits: int, lead_dims: int = 0) -> tuple[jnp.ndarray, QuantParams]:
+    """Per-tensor uniform quantization to k-bit codes (int32 in [0, 2^k)).
+
+    ``lead_dims`` > 0 treats the leading dims as a stack of independent
+    tensors (per-layer / per-expert scales), matching the paper's per-tensor
+    granularity applied to each weight matrix.
+    """
+    assert 1 <= k_bits <= 8
+    red = tuple(range(lead_dims, x.ndim))
+    lo = jnp.min(x, axis=red, keepdims=True).astype(jnp.float32)
+    hi = jnp.max(x, axis=red, keepdims=True).astype(jnp.float32)
+    span = jnp.maximum(hi - lo, 1e-12)
+    s = span / (2**k_bits - 1)
+    z = jnp.round(-lo / s).astype(jnp.int32)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s).astype(jnp.int32) + z, 0, 2**k_bits - 1)
+    s = s.reshape(x.shape[:lead_dims])
+    z = z.reshape(x.shape[:lead_dims])
+    return q, QuantParams(scale=s, zero=z, k_bits=k_bits)
+
+
+def dequantize(q: jnp.ndarray, qp: QuantParams) -> jnp.ndarray:
+    """Combined-code dequantization: s * (q - z)."""
+    return (q.astype(jnp.float32) - qp.zero.astype(jnp.float32)) * qp.scale
+
+
+# ---------------------------------------------------------------------------
+# Separate Quantization: m-part decomposition of the code space
+# ---------------------------------------------------------------------------
+def part_id(q: jnp.ndarray, k_bits: int, m: int) -> jnp.ndarray:
+    """Which of the m value-range parts each code belongs to (Eq. 10)."""
+    assert m >= 1 and (m & (m - 1)) == 0, "m must be a power of two"
+    assert m <= 2**k_bits
+    width = (2**k_bits) // m
+    return q // width
+
+
+def decompose(q: jnp.ndarray, k_bits: int, m: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Split combined codes into (part_id, low_code).
+
+    ``low_code`` is the (k - log2 m)-bit stored code of Eq. 9 after applying
+    the offset o_j; ``part_id`` is implicit in CSR storage (which part's list
+    an element appears in) and is materialized here for fixed-shape layouts.
+    """
+    pid = part_id(q, k_bits, m)
+    width = (2**k_bits) // m
+    low = q - pid * width
+    return pid, low
+
+
+def recompose(pid: jnp.ndarray, low: jnp.ndarray, k_bits: int, m: int) -> jnp.ndarray:
+    """Inverse of :func:`decompose` (Eq. 12 summed over disjoint parts)."""
+    width = (2**k_bits) // m
+    return pid * width + low
+
+
+def storage_bits_per_value(k_bits: int, m: int) -> float:
+    """Stored bits per surviving value under Separate Quantization."""
+    return k_bits - math.log2(m)
+
+
+def compression_ratio(alpha: float, k_bits: int | None, m: int = 1) -> float:
+    """Paper's ratio convention: alpha * 16/(k - log2 m); bf16 reference."""
+    if k_bits is None:
+        return float(alpha)
+    bits = storage_bits_per_value(k_bits, m)
+    if bits <= 0:
+        # paper's "-" rows: every part holds identical values; one scalar each
+        return float("inf")
+    return alpha * 16.0 / bits
+
+
+# ---------------------------------------------------------------------------
+# Bit packing (k in {1,2,4,8} codes per uint8 byte, packed along one axis)
+# ---------------------------------------------------------------------------
+def pack_width(k_bits: int) -> int:
+    """Physical bit width used to pack k-bit codes (next of 1/2/4/8).
+
+    Odd widths (k=3,5,6,7 — they arise from final_bits + log2 m sweeps)
+    are stored at the next supported width; the *accounted* storage bits
+    stay k (the paper's CSR lists are not byte-aligned either way)."""
+    for w in (1, 2, 4, 8):
+        if k_bits <= w:
+            return w
+    raise ValueError(k_bits)
+
+
+def packed_len(n: int, k_bits: int) -> int:
+    per = 8 // pack_width(k_bits)
+    return (n + per - 1) // per
+
+
+def pack_bits(q: jnp.ndarray, k_bits: int, axis: int = 0) -> jnp.ndarray:
+    """Pack k-bit codes into uint8 along ``axis`` (pads with zeros)."""
+    assert k_bits in (1, 2, 4, 8)
+    per = 8 // k_bits
+    q = jnp.moveaxis(q, axis, 0).astype(jnp.uint8)
+    n = q.shape[0]
+    pad = (-n) % per
+    if pad:
+        q = jnp.concatenate([q, jnp.zeros((pad, *q.shape[1:]), jnp.uint8)], axis=0)
+    q = q.reshape(q.shape[0] // per, per, *q.shape[1:])
+    shifts = (jnp.arange(per, dtype=jnp.uint8) * k_bits).reshape(1, per, *([1] * (q.ndim - 2)))
+    packed = jnp.bitwise_or.reduce(q << shifts, axis=1) if hasattr(jnp.bitwise_or, "reduce") else None
+    if packed is None:  # jnp ufuncs lack .reduce in some versions
+        packed = jnp.zeros((q.shape[0], *q.shape[2:]), jnp.uint8)
+        for i in range(per):
+            packed = packed | (q[:, i] << jnp.uint8(i * k_bits))
+    return jnp.moveaxis(packed, 0, axis)
+
+
+def unpack_bits(packed: jnp.ndarray, k_bits: int, n: int, axis: int = 0) -> jnp.ndarray:
+    """Inverse of :func:`pack_bits`; returns int32 codes, trimmed to n."""
+    assert k_bits in (1, 2, 4, 8)
+    per = 8 // k_bits
+    p = jnp.moveaxis(packed, axis, 0)
+    mask = jnp.uint8(2**k_bits - 1)
+    cols = [( (p >> jnp.uint8(i * k_bits)) & mask ) for i in range(per)]
+    q = jnp.stack(cols, axis=1).reshape(p.shape[0] * per, *p.shape[1:])
+    q = q[:n].astype(jnp.int32)
+    return jnp.moveaxis(q, 0, axis)
+
+
+# ---------------------------------------------------------------------------
+# numpy twins (storage layer; never traced)
+# ---------------------------------------------------------------------------
+def np_quantize(x: np.ndarray, k_bits: int):
+    lo, hi = float(x.min()), float(x.max())
+    s = max(hi - lo, 1e-12) / (2**k_bits - 1)
+    z = int(round(-lo / s))
+    q = np.clip(np.round(x / s).astype(np.int64) + z, 0, 2**k_bits - 1).astype(np.int32)
+    return q, s, z

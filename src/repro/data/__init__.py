@@ -1,0 +1,9 @@
+from repro.data.pipeline import (
+    FormatOnlyTask,
+    MemmapTokens,
+    PretrainMixture,
+    SortTask,
+    SyntheticLM,
+)
+
+__all__ = ["FormatOnlyTask", "MemmapTokens", "PretrainMixture", "SortTask", "SyntheticLM"]

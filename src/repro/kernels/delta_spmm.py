@@ -1,0 +1,213 @@
+"""Pallas TPU kernels for the DeltaDQ hot path.
+
+TPU adaptation of the paper's CSR SpMM (DESIGN.md §3): the packed,
+quantized, *structured*-sparse delta streams HBM->VMEM at compressed
+width; inside VMEM each (group x out-tile) block is dequantized and
+scattered to a dense [h_g, Ob] tile via the one-hot-compare idiom (TPU's
+scatter), which then feeds the MXU as a regular dense matmul. HBM traffic
+is compressed bytes only; the dense tile never leaves VMEM.
+
+Kernels
+    delta_spmm_kernel       y = x @ dequant(delta)
+    fused_base_delta_kernel y = x @ (W_base + dequant(delta))   (x read once)
+    dequant_kernel          dense delta tile materialization
+
+Grid: (T/Tb, O/Ob, G) with the group axis innermost ("arbitrary") so the
+output tile accumulates in VMEM across groups. Supported envelope (checked
+by ops.py, XLA fallback otherwise): h_g <= 256, keep <= 128 — the paper's
+optimal h_g* is 16..256 (Table 4), so the envelope covers the method's
+operating range; row-wise h_g == h_in is the fallback's job.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# kept-values-per-chunk for the in-VMEM scatter loop; bounds the one-hot
+# working set to KC * h_g * Ob * 4B (= 1 MiB at 8 x 256 x 128)
+_KC = 8
+
+
+def _unpack_codes(codes, k_bits: int, keep: int):
+    """[Kp, Ob] uint8 -> [keep, Ob] int32 codes (w = physical pack width)."""
+    w = 1 if k_bits <= 1 else 2 if k_bits <= 2 else 4 if k_bits <= 4 else 8
+    if w == 8:
+        return codes.astype(jnp.int32)
+    per = 8 // w
+    mask = jnp.uint8(2**w - 1)
+    cols = [(codes >> jnp.uint8(i * w)) & mask for i in range(per)]
+    q = jnp.stack(cols, axis=1)                      # [Kp, per, Ob]
+    q = q.reshape(codes.shape[0] * per, codes.shape[1])
+    return q[:keep].astype(jnp.int32)
+
+
+def _scatter_dense(idx, vals, h_g: int, keep: int):
+    """Build the dense [h_g, Ob] tile from (idx, vals) [keep, Ob] in VMEM.
+
+    One-hot-compare scatter, chunked over `keep` to bound the working set.
+    """
+    Ob = idx.shape[-1]
+    iota_h = jax.lax.broadcasted_iota(jnp.int32, (1, h_g, 1), 1)
+    n_chunks = (keep + _KC - 1) // _KC
+    pad = n_chunks * _KC - keep
+    if pad:
+        idx = jnp.pad(idx, ((0, pad), (0, 0)))
+        vals = jnp.pad(vals, ((0, pad), (0, 0)))
+    idx = idx.reshape(n_chunks, _KC, Ob)
+    vals = vals.reshape(n_chunks, _KC, Ob)
+
+    def body(c, dense):
+        sel_i = idx[c][:, None, :]                   # [KC, 1, Ob]
+        sel_v = vals[c][:, None, :]
+        oh = (sel_i == iota_h).astype(jnp.float32)   # [KC, h_g, Ob]
+        return dense + jnp.sum(oh * sel_v, axis=0)
+
+    dense0 = jnp.zeros((h_g, Ob), jnp.float32)
+    return jax.lax.fori_loop(0, n_chunks, body, dense0)
+
+
+def _decode_tile(idx_ref, codes_ref, scale_ref, zero_ref, *, k_bits, keep, h_g):
+    idx = idx_ref[0].astype(jnp.int32)               # [keep, Ob]
+    if k_bits is None:
+        vals = codes_ref[0].astype(jnp.float32)
+    else:
+        q = _unpack_codes(codes_ref[0], k_bits, keep)
+        s = scale_ref[0, 0]
+        z = zero_ref[0, 0].astype(jnp.float32)
+        vals = (q.astype(jnp.float32) - z) * s
+    return _scatter_dense(idx, vals, h_g, keep)
+
+
+# ---------------------------------------------------------------------------
+# y = x @ dequant(delta)
+# ---------------------------------------------------------------------------
+def _spmm_body(x_ref, idx_ref, codes_ref, scale_ref, zero_ref, o_ref, *,
+               k_bits, keep, h_g):
+    gi = pl.program_id(2)
+
+    @pl.when(gi == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    dense = _decode_tile(idx_ref, codes_ref, scale_ref, zero_ref,
+                         k_bits=k_bits, keep=keep, h_g=h_g)
+    x = x_ref[...].astype(jnp.float32)               # [Tb, h_g]
+    o_ref[...] += jnp.dot(x, dense, preferred_element_type=jnp.float32)
+
+
+def delta_spmm_kernel(x, idx, codes, scale, zero, *, h_g: int, keep: int,
+                      k_bits: Optional[int], h_out: int,
+                      tb: int = 128, ob: int = 128, interpret: bool = False):
+    """x [T, h_in]; idx [G, keep, O]; codes [G, Kp|keep, O]; -> [T, O] f32."""
+    T, h_in = x.shape
+    G = h_in // h_g
+    Kp = codes.shape[1]
+    tb = min(tb, T)
+    ob = min(ob, h_out)
+    assert T % tb == 0 and h_out % ob == 0, (T, tb, h_out, ob)
+    grid = (T // tb, h_out // ob, G)
+    return pl.pallas_call(
+        functools.partial(_spmm_body, k_bits=k_bits, keep=keep, h_g=h_g),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, h_g), lambda t, o, g: (t, g)),
+            pl.BlockSpec((1, keep, ob), lambda t, o, g: (g, 0, o)),
+            pl.BlockSpec((1, Kp, ob), lambda t, o, g: (g, 0, o)),
+            pl.BlockSpec((1, 1), lambda t, o, g: (0, 0)),
+            pl.BlockSpec((1, 1), lambda t, o, g: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, ob), lambda t, o, g: (t, o)),
+        out_shape=jax.ShapeDtypeStruct((T, h_out), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, idx, codes, scale, zero)
+
+
+# ---------------------------------------------------------------------------
+# y = x @ (W + dequant(delta))  — separate computation fused into one pass
+# ---------------------------------------------------------------------------
+def _fused_body(x_ref, w_ref, idx_ref, codes_ref, scale_ref, zero_ref, o_ref, *,
+                k_bits, keep, h_g):
+    gi = pl.program_id(2)
+
+    @pl.when(gi == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    dense = _decode_tile(idx_ref, codes_ref, scale_ref, zero_ref,
+                         k_bits=k_bits, keep=keep, h_g=h_g)
+    w = w_ref[...].astype(jnp.float32)               # [h_g, Ob]
+    x = x_ref[...].astype(jnp.float32)               # [Tb, h_g]
+    o_ref[...] += jnp.dot(x, w + dense, preferred_element_type=jnp.float32)
+
+
+def fused_base_delta_kernel(x, w, idx, codes, scale, zero, *, h_g: int, keep: int,
+                            k_bits: Optional[int],
+                            tb: int = 128, ob: int = 128, interpret: bool = False):
+    """x [T, h_in]; w [h_in, h_out]; packed delta -> [T, h_out] f32."""
+    T, h_in = x.shape
+    h_out = w.shape[1]
+    G = h_in // h_g
+    Kp = codes.shape[1]
+    tb = min(tb, T)
+    ob = min(ob, h_out)
+    assert T % tb == 0 and h_out % ob == 0
+    grid = (T // tb, h_out // ob, G)
+    return pl.pallas_call(
+        functools.partial(_fused_body, k_bits=k_bits, keep=keep, h_g=h_g),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, h_g), lambda t, o, g: (t, g)),
+            pl.BlockSpec((h_g, ob), lambda t, o, g: (g, o)),
+            pl.BlockSpec((1, keep, ob), lambda t, o, g: (g, 0, o)),
+            pl.BlockSpec((1, Kp, ob), lambda t, o, g: (g, 0, o)),
+            pl.BlockSpec((1, 1), lambda t, o, g: (0, 0)),
+            pl.BlockSpec((1, 1), lambda t, o, g: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, ob), lambda t, o, g: (t, o)),
+        out_shape=jax.ShapeDtypeStruct((T, h_out), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, w, idx, codes, scale, zero)
+
+
+# ---------------------------------------------------------------------------
+# dense delta materialization (merge / eval path)
+# ---------------------------------------------------------------------------
+def _dequant_body(idx_ref, codes_ref, scale_ref, zero_ref, o_ref, *,
+                  k_bits, keep, h_g):
+    o_ref[...] = _decode_tile(idx_ref, codes_ref, scale_ref, zero_ref,
+                              k_bits=k_bits, keep=keep, h_g=h_g)
+
+
+def dequant_kernel(idx, codes, scale, zero, *, h_g: int, keep: int,
+                   k_bits: Optional[int], h_out: int,
+                   ob: int = 128, interpret: bool = False):
+    """Packed delta -> dense [h_in, h_out] f32."""
+    G = idx.shape[0]
+    Kp = codes.shape[1]
+    ob = min(ob, h_out)
+    assert h_out % ob == 0
+    grid = (G, h_out // ob)
+    return pl.pallas_call(
+        functools.partial(_dequant_body, k_bits=k_bits, keep=keep, h_g=h_g),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, keep, ob), lambda g, o: (g, 0, o)),
+            pl.BlockSpec((1, Kp, ob), lambda g, o: (g, 0, o)),
+            pl.BlockSpec((1, 1), lambda g, o: (0, 0)),
+            pl.BlockSpec((1, 1), lambda g, o: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((h_g, ob), lambda g, o: (g, o)),
+        out_shape=jax.ShapeDtypeStruct((G * h_g, h_out), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "parallel")),
+        interpret=interpret,
+    )(idx, codes, scale, zero)

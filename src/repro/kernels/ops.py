@@ -1,0 +1,113 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handle envelope checks (tile divisibility, supported h_g/keep), input
+prep (padding, scalar shaping) and the interpret-mode switch used for
+CPU validation. Outside the kernel envelope the XLA fallback
+(reconstruct-then-matmul) is used — mathematically identical.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pack import PackedDelta, reconstruct_dense
+from repro.kernels import delta_spmm as _k
+
+# CPU containers run kernels in interpret mode; real TPUs compile them.
+_INTERPRET = jax.default_backend() != "tpu"
+
+MAX_HG = 256
+MAX_KEEP = 128
+
+
+def kernel_supported(d: PackedDelta) -> bool:
+    return (not d.stack_shape()) and d.h_g <= MAX_HG and d.keep <= MAX_KEEP \
+        and (d.k_bits is None or 1 <= d.k_bits <= 8)
+
+
+def _scalars(d: PackedDelta):
+    s = jnp.asarray(d.scale, jnp.float32).reshape(1, 1)
+    z = jnp.asarray(d.zero, jnp.int32).reshape(1, 1)
+    return s, z
+
+
+def _pad_rows(x: jnp.ndarray, mult: int):
+    T = x.shape[0]
+    pad = (-T) % mult
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, x.shape[1]), x.dtype)], axis=0)
+    return x, T
+
+
+
+
+def delta_spmm(x: jnp.ndarray, d: PackedDelta, *, tb: int = 128, ob: int = 128,
+               interpret: Optional[bool] = None) -> jnp.ndarray:
+    """y = x @ dequant(d). x [..., h_in] -> [..., h_out] (f32)."""
+    if interpret is None:
+        interpret = _INTERPRET
+    if not kernel_supported(d):
+        return x.reshape(-1, d.h_in).astype(jnp.float32) @ reconstruct_dense(d) \
+            if x.ndim == 2 else x @ reconstruct_dense(d, dtype=x.dtype)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, d.h_in)
+    tb_eff = min(tb, max(_pow2_floor(x2.shape[0]), 8))
+    x2, T = _pad_rows(x2, tb_eff)
+    ob_eff = ob if d.h_out % ob == 0 else _largest_divisor_tile(d.h_out, ob)
+    s, z = _scalars(d)
+    y = _k.delta_spmm_kernel(x2, d.idx, d.codes, s, z, h_g=d.h_g, keep=d.keep,
+                             k_bits=d.k_bits, h_out=d.h_out,
+                             tb=tb_eff, ob=ob_eff, interpret=interpret)
+    return y[:T].reshape(*lead, d.h_out)
+
+
+def fused_base_delta(x: jnp.ndarray, w: jnp.ndarray, d: PackedDelta, *,
+                     tb: int = 128, ob: int = 128,
+                     interpret: Optional[bool] = None) -> jnp.ndarray:
+    """y = x @ (w + dequant(d)); reads x once (separate computation, fused)."""
+    if interpret is None:
+        interpret = _INTERPRET
+    if not kernel_supported(d):
+        return (x @ w) + delta_spmm(x, d, interpret=interpret).astype(w.dtype)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, d.h_in)
+    tb_eff = min(tb, max(_pow2_floor(x2.shape[0]), 8))
+    x2, T = _pad_rows(x2, tb_eff)
+    ob_eff = ob if d.h_out % ob == 0 else _largest_divisor_tile(d.h_out, ob)
+    s, z = _scalars(d)
+    y = _k.fused_base_delta_kernel(x2, w, d.idx, d.codes, s, z, h_g=d.h_g,
+                                   keep=d.keep, k_bits=d.k_bits,
+                                   tb=tb_eff, ob=ob_eff, interpret=interpret)
+    return y[:T].reshape(*lead, d.h_out)
+
+
+def dequant(d: PackedDelta, *, ob: int = 128,
+            interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Materialize dense delta [h_in, h_out] (merge path)."""
+    if interpret is None:
+        interpret = _INTERPRET
+    if not kernel_supported(d):
+        return reconstruct_dense(d)
+    ob_eff = ob if d.h_out % ob == 0 else _largest_divisor_tile(d.h_out, ob)
+    s, z = _scalars(d)
+    return _k.dequant_kernel(d.idx, d.codes, s, z, h_g=d.h_g, keep=d.keep,
+                             k_bits=d.k_bits, h_out=d.h_out, ob=ob_eff,
+                             interpret=interpret)
+
+
+def _pow2_floor(n: int) -> int:
+    p = 1
+    while p * 2 <= n:
+        p *= 2
+    return p
+
+
+def _largest_divisor_tile(n: int, cap: int) -> int:
+    for t in range(min(cap, n), 0, -1):
+        if n % t == 0:
+            return t
+    return 1

@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each kernel in this package has a ref twin here; kernel tests sweep
+shapes/dtypes and assert allclose against these.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.pack import PackedDelta, reconstruct_dense
+
+
+def delta_spmm_ref(x: jnp.ndarray, d: PackedDelta) -> jnp.ndarray:
+    """x [T, h_in] @ dequant(delta) [h_in, h_out] -> [T, h_out] (f32)."""
+    dense = reconstruct_dense(d, dtype=jnp.float32)
+    return x.astype(jnp.float32) @ dense
+
+
+def fused_base_delta_ref(x: jnp.ndarray, w: jnp.ndarray, d: PackedDelta) -> jnp.ndarray:
+    """x @ (W_base + dequant(delta)) in one pass -> [T, h_out] (f32)."""
+    dense = reconstruct_dense(d, dtype=jnp.float32)
+    return x.astype(jnp.float32) @ (w.astype(jnp.float32) + dense)
+
+
+def dequant_tile_ref(d: PackedDelta) -> jnp.ndarray:
+    """Materialize the dense delta [h_in, h_out] (f32)."""
+    return reconstruct_dense(d, dtype=jnp.float32)

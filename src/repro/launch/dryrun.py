@@ -1,0 +1,325 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_EXTRA_XLA", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves on placeholder devices that the production
+sharding is coherent: ``jax.jit(step).lower(**ShapeDtypeStructs).compile()``
+must succeed on the single-pod 16x16 mesh and the 2x16x16 multi-pod mesh,
+and the compiled artifact yields the memory analysis + roofline terms
+recorded in EXPERIMENTS.md.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+        --shape decode_32k --mesh pod --out results/
+
+Shapes (assigned): train_4k (train_step), prefill_32k (prefill),
+decode_32k / long_500k (serve_step = one token against a seq-long cache).
+long_500k only runs for sub-quadratic archs (DESIGN.md §4).
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, list_archs
+from repro.configs.arch import ArchConfig
+from repro.core.compress import DeltaDQSpec, delta_axes, delta_specs
+from repro.dist import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.optim import adamw
+from repro.roofline import analysis as roofline
+from repro.train import make_train_step
+from repro.utils import map_with_paths, tree_bytes
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32_768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32_768, batch=128),
+    "long_500k": dict(kind="decode", seq=524_288, batch=1),
+}
+
+# serving dry-runs lower the technique-representative path: base + one
+# tenant's packed delta at the paper's flagship 128x setting
+SERVE_DELTA = DeltaDQSpec(alpha=8.0, k_bits=4, m=8, h_g=128)
+
+
+def pick_n_micro(cfg: ArchConfig, batch: int, dp: int) -> int:
+    per_dev = batch // dp
+    n = cfg.n_params()
+    if n > 5e10:
+        target = 8
+    elif n > 5e9:
+        target = 4
+    elif n > 1e9:
+        target = 2
+    else:
+        target = 1
+    while per_dev % target or batch % target:
+        target //= 2
+    return max(target, 1)
+
+
+def input_specs(cfg: ArchConfig, shape: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    info = SHAPES[shape]
+    B, S = info["batch"], info["seq"]
+    i32 = jnp.int32
+    bf16 = jnp.dtype(cfg.param_dtype)
+    if info["kind"] in ("train", "prefill"):
+        if cfg.family == "encdec":
+            return {"tokens": jax.ShapeDtypeStruct((B, S // 2), i32),
+                    "enc_feats": jax.ShapeDtypeStruct((B, S // 2, cfg.d_model), bf16)}
+        if cfg.family == "vlm":
+            return {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                    "image_embeds": jax.ShapeDtypeStruct(
+                        (B, cfg.n_frontend_tokens, cfg.d_model), bf16)}
+        return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    # decode: single new token against a seq-long cache
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+
+
+def _rules_for(mesh, kind: str, shape: str) -> shd.ShardingRules:
+    rules = shd.ShardingRules(mesh)
+    if kind == "train":
+        return rules.with_overrides(**shd.TRAIN_OVERRIDES)
+    if shape == "long_500k":
+        return rules.with_overrides(**{**shd.SERVE_OVERRIDES,
+                                       **shd.LONG_CONTEXT_OVERRIDES})
+    return rules.with_overrides(**shd.SERVE_OVERRIDES)
+
+
+def _tokens_of(cfg, shape) -> int:
+    info = SHAPES[shape]
+    if info["kind"] in ("train", "prefill"):
+        s = info["seq"] // 2 if cfg.family == "encdec" else info["seq"]
+        return info["batch"] * s
+    return info["batch"]  # one token per row
+
+
+def analytic_attention_flops(cfg: ArchConfig, batch: int, seq: int,
+                             kind: str, n_devices: int) -> float:
+    """Causal-attention FLOPs the q-block scan hides from cost_analysis.
+
+    QK^T + PV = 4 MACs per (query, key, head_dim, head) pair; causal and
+    window masks halve/bound the pair count. Training multiplies by 4
+    (forward + remat forward + ~2x backward). Per device (batch+heads
+    spread over the mesh; conservative: divide by n_devices).
+    """
+    total = 0.0
+    for w in cfg.layer_windows:
+        s_eff = min(w, seq) if w else seq
+        pairs = batch * (seq * s_eff - (s_eff * (s_eff - 1)) // 2 if w
+                         else seq * (seq + 1) // 2)
+        total += 4.0 * pairs * cfg.head_dim * cfg.n_heads
+    # encdec: counts the decoder stack only (encoder/cross are same-order;
+    # documented undercount in EXPERIMENTS.md)
+    return total * (4.0 if kind == "train" else 1.0) / n_devices
+
+
+@dataclasses.dataclass
+class CellResult:
+    arch: str
+    shape: str
+    mesh: str
+    ok: bool
+    seconds: float
+    skip_reason: Optional[str] = None
+    error: Optional[str] = None
+    memory: Optional[dict] = None
+    roofline: Optional[dict] = None
+    collectives: Optional[dict] = None
+    notes: Optional[dict] = None
+
+
+def lower_cell(arch: str, shape: str, multi_pod: bool,
+               use_delta: bool = True, rules_overrides: Optional[dict] = None,
+               n_micro: Optional[int] = None,
+               want_text: bool = False) -> CellResult:
+    t0 = time.time()
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cfg = get_config(arch)
+    info = SHAPES[shape]
+    if shape == "long_500k" and not cfg.subquadratic:
+        return CellResult(arch, shape, mesh_name, ok=True, seconds=0.0,
+                          skip_reason="pure full attention (DESIGN.md §4)")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = _rules_for(mesh, info["kind"], shape)
+    if rules_overrides:
+        rules = rules.with_overrides(**rules_overrides)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+
+    p_specs = lm.param_specs(cfg)
+    p_axes = lm.param_axes(cfg)
+    p_sh = shd.tree_shardings(rules, p_specs, p_axes)
+
+    batch_specs = input_specs(cfg, shape)
+    b_axes = shd.batch_axes(batch_specs)
+    b_sh = shd.tree_shardings(rules, batch_specs, b_axes)
+
+    notes = {"n_params": cfg.n_params(), "n_active": cfg.n_active_params(),
+             "param_bytes_global": tree_bytes(p_specs)}
+
+    # H2: reshard-for-lookup embedding (EXPERIMENTS.md §Perf)
+    lm.set_embed_gather_reshard(True)
+    with mesh:
+        if info["kind"] == "train":
+            # roofline fidelity: unroll layers so SPMD doesn't hide scan trip
+            # counts from cost_analysis (EXPERIMENTS.md §Perf, fix M1)
+            lm.set_force_loop(True)
+            dp = mesh.shape.get("pod", 1) * mesh.shape["data"]
+            nm = n_micro or pick_n_micro(cfg, info["batch"], dp)
+            notes["n_micro"] = nm
+            from repro.optim.adamw import AdamWConfig
+            step = make_train_step(cfg, AdamWConfig(), n_micro=nm, remat=True)
+            o_specs = adamw.state_specs(p_specs)
+            o_axes = {"m": p_axes, "v": p_axes, "master": p_axes, "step": ()}
+            zaxes = ("pod", "data") if multi_pod else ("data",)
+            o_sh = {"m": shd.zero1_shardings(rules, p_specs, p_axes, zaxes),
+                    "v": shd.zero1_shardings(rules, p_specs, p_axes, zaxes),
+                    "master": shd.zero1_shardings(rules, p_specs, p_axes, zaxes),
+                    "step": jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())}
+            rng_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+            jf = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh, None))
+            lowered = jf.lower(p_specs, {**adamw.state_specs(p_specs)}, batch_specs, rng_spec)
+        elif info["kind"] == "prefill":
+            d_specs = delta_specs(p_specs, SERVE_DELTA) if use_delta else None
+            d_sh = (shd.tree_shardings(
+                rules, d_specs,
+                delta_axes(p_specs, p_axes, SERVE_DELTA, mesh.shape["model"]))
+                if use_delta else None)
+            cache = lm.cache_specs(cfg, info["batch"], info["seq"],
+                                   enc_len=info["seq"] // 2 if cfg.family == "encdec" else 0)
+            c_sh = shd.tree_shardings(rules, cache, shd.cache_axes(cache))
+
+            def fn(params, deltas, batch, cache):
+                return lm.prefill(cfg, params, batch, cache, deltas=deltas)
+
+            jf = jax.jit(fn, in_shardings=(p_sh, d_sh, b_sh, c_sh))
+            lowered = jf.lower(p_specs, d_specs, batch_specs, cache)
+        else:  # decode
+            d_specs = delta_specs(p_specs, SERVE_DELTA) if use_delta else None
+            d_sh = (shd.tree_shardings(
+                rules, d_specs,
+                delta_axes(p_specs, p_axes, SERVE_DELTA, mesh.shape["model"]))
+                if use_delta else None)
+            enc_len = info["seq"] // 2 if cfg.family == "encdec" else 0
+            dec_seq = info["seq"] // 2 if cfg.family == "encdec" else info["seq"]
+            cache = lm.cache_specs(cfg, info["batch"], dec_seq, enc_len=enc_len)
+            c_sh = shd.tree_shardings(rules, cache, shd.cache_axes(cache))
+
+            def fn(params, deltas, cache, tokens, pos):
+                return lm.decode_step(cfg, params, cache, tokens, pos, deltas=deltas)
+
+            jf = jax.jit(fn, in_shardings=(p_sh, d_sh, c_sh, b_sh["tokens"], None))
+            lowered = jf.lower(p_specs, d_specs, cache,
+                               batch_specs["tokens"], jax.ShapeDtypeStruct((), jnp.int32))
+
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        memory = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        }
+        lm.set_force_loop(False)
+        text = compiled.as_text()
+        rl = roofline.from_compiled(
+            compiled, text, info["kind"],
+            notes["n_params"], notes["n_active"], _tokens_of(cfg, shape), n_dev)
+        coll = roofline.collective_bytes(text)
+        notes["fallbacks"] = rules.fallbacks[:40]
+
+        # --- measurement corrections (documented in EXPERIMENTS.md §Perf) ---
+        # M2: the microbatch scan body is counted once by cost_analysis under
+        #     SPMD; scale body terms by n_micro (optimizer traffic excluded).
+        # M3: the attention q-block scan likewise hides (trips-1)/trips of
+        #     attention FLOPs; add the analytic causal-attention count.
+        nm = notes.get("n_micro", 1)
+        if info["kind"] in ("train", "prefill"):
+            opt_bytes = 28.0 * notes["n_params"] / n_dev if info["kind"] == "train" else 0.0
+            rl.flops = rl.flops * nm
+            rl.bytes_accessed = (rl.bytes_accessed - opt_bytes) * nm + opt_bytes
+            rl.coll_bytes = rl.coll_bytes * nm
+            seq = SHAPES[shape]["seq"] // (2 if cfg.family == "encdec" else 1)
+            rl.flops += analytic_attention_flops(
+                cfg, SHAPES[shape]["batch"] // nm, seq, info["kind"], n_dev) * nm
+        rl_dict = rl.to_dict()
+        # memory_frac: ideal HBM traffic (read args + write outs once) over
+        # actual bytes accessed — the score that matters for memory-bound cells
+        ideal = float((memory["argument_bytes"] or 0) + (memory["output_bytes"] or 0))
+        rl_dict["memory_frac"] = min(1.0, ideal / rl.bytes_accessed) if rl.bytes_accessed else None
+        res = CellResult(arch, shape, mesh_name, ok=True, seconds=time.time() - t0,
+                         memory=memory, roofline=rl_dict, collectives=coll,
+                         notes=notes)
+        if want_text:
+            res.notes["hlo_text"] = text
+        return res
+
+
+def run_cell(arch, shape, multi_pod, out_dir=None, **kw) -> CellResult:
+    try:
+        res = lower_cell(arch, shape, multi_pod, **kw)
+    except Exception as e:  # failure here = a bug in our sharding config
+        res = CellResult(arch, shape, "2x16x16" if multi_pod else "16x16",
+                         ok=False, seconds=0.0,
+                         error=f"{type(e).__name__}: {e}\n{traceback.format_exc()[-2000:]}")
+    finally:
+        lm.set_force_loop(False)
+        lm.set_embed_gather_reshard(False)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch}__{shape}__{res.mesh}"
+        payload = dataclasses.asdict(res)
+        if payload.get("notes"):
+            payload["notes"].pop("hlo_text", None)
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(payload, f, indent=1)
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all", choices=["all", *SHAPES])
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--no-delta", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+                path = os.path.join(args.out, tag + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[skip] {tag}")
+                    continue
+                res = run_cell(arch, shape, mp, out_dir=args.out,
+                               use_delta=not args.no_delta)
+                status = ("SKIP " + res.skip_reason) if res.skip_reason else \
+                    ("ok" if res.ok else "FAIL")
+                extra = ""
+                if res.roofline:
+                    extra = (f" bottleneck={res.roofline['bottleneck']}"
+                             f" frac={res.roofline['roofline_frac']:.3f}")
+                print(f"[{status}] {tag} ({res.seconds:.0f}s){extra}", flush=True)
+                if not res.ok:
+                    print(res.error)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state. The dry-run entry point sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import so these meshes build on the CPU container.
+
+Production topology (TPU v5e):
+  single pod : (16, 16)      axes (data, model)   — 256 chips
+  multi-pod  : (2, 16, 16)   axes (pod, data, model) — 512 chips
+``model`` is the ICI-contiguous inner axis (TP collectives stay on-chip
+-mesh); ``pod`` crosses DCI and carries only gradient reduction (training)
+or nothing at all (serving; DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (possibly fake) local devices exist."""
+    n = len(jax.devices())
+    assert data * model <= n, (data, model, n)
+    return jax.make_mesh((data, model), ("data", "model"))

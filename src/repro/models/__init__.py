@@ -1,0 +1,25 @@
+from repro.models import lm
+from repro.models.lm import (
+    cache_specs,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    param_axes,
+    param_specs,
+    prefill,
+)
+
+__all__ = [
+    "lm",
+    "cache_specs",
+    "decode_step",
+    "forward",
+    "init_cache",
+    "init_params",
+    "loss_fn",
+    "param_axes",
+    "param_specs",
+    "prefill",
+]

@@ -1,0 +1,148 @@
+"""Shared neural-net layers for the model zoo (pure JAX, no flax).
+
+All matmuls route through :func:`repro.core.apply.apply_linear` so every
+linear site supports the paper's separate-computation delta correction.
+Attention is q-blocked (flash-attention-lite at the XLA level) so 32k+
+prefill never materializes a full [S, S] score tensor per head.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.apply import apply_linear
+
+_NEG_INF = -1e30
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x [..., S, H, D]; positions [S] or [..., S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., :, None] * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., :, None, :]   # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def head_rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """QK-norm: RMSNorm over head_dim. x [..., H, D], scale [D]."""
+    return rmsnorm(x, scale, eps)
+
+
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+def _attend(q, k, v, q_pos, k_pos, window, causal, cap):
+    """One q-block of GQA attention.
+
+    q [B,Sq,Hq,D]; k,v [B,Sk,Hkv,D]; q_pos [Sq]; k_pos [Sk] (entries < 0 are
+    invalid ring-buffer slots); window: 0 = global, >0 = sliding window
+    (may be a traced scalar).
+    """
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (D ** -0.5)
+    scores = softcap(scores, cap)
+    valid = (k_pos >= 0)[None, :]
+    if causal:
+        valid = valid & (k_pos[None, :] <= q_pos[:, None])
+    window = jnp.asarray(window)
+    in_window = jnp.where(window > 0, q_pos[:, None] - k_pos[None, :] < window, True)
+    valid = valid & in_window
+    scores = jnp.where(valid[None, None, None], scores, _NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def attention(q, k, v, q_pos, k_pos, *, window=0, causal=True, cap=None,
+              block_q: int = 1024):
+    """GQA attention, blocked over the query dim to bound live memory."""
+    Sq = q.shape[1]
+    if Sq <= block_q or Sq % block_q:
+        return _attend(q, k, v, q_pos, k_pos, window, causal, cap)
+    nb = Sq // block_q
+    qb = q.reshape(q.shape[0], nb, block_q, *q.shape[2:]).swapaxes(0, 1)
+    pb = q_pos.reshape(nb, block_q)
+
+    def body(_, qp):
+        qi, pi = qp
+        return None, _attend(qi, k, v, pi, k_pos, window, causal, cap)
+
+    _, out = jax.lax.scan(body, None, (qb, pb))
+    return out.swapaxes(0, 1).reshape(q.shape)
+
+
+def cross_attention(q, k, v, cap=None):
+    """Unmasked attention over a fixed memory (frontend embeddings)."""
+    Sk = k.shape[1]
+    k_pos = jnp.zeros((Sk,), jnp.int32)
+    q_pos = jnp.zeros((q.shape[1],), jnp.int32)
+    return _attend(q, k, v, q_pos, k_pos, jnp.int32(0), False, cap)
+
+
+# ---------------------------------------------------------------------------
+# Blocks' inner projections
+# ---------------------------------------------------------------------------
+def qkv_project(x, p, d, cfg, positions, rope_on=True):
+    """x [B,S,d_model] -> q [B,S,Hq,D], k,v [B,S,Hkv,D] (+rope, +qk-norm)."""
+    from repro.core.apply import dget
+    B, S, _ = x.shape
+    q = apply_linear(x, p["wq"], dget(d, "wq")).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = apply_linear(x, p["wk"], dget(d, "wk")).reshape(B, S, cfg.n_kv, cfg.head_dim)
+    v = apply_linear(x, p["wv"], dget(d, "wv")).reshape(B, S, cfg.n_kv, cfg.head_dim)
+    if cfg.qk_norm:
+        q = head_rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = head_rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if rope_on:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def glu_mlp(x, p, d, act: str):
+    """SwiGLU (silu) / GeGLU (gelu) feed-forward."""
+    from repro.core.apply import dget
+    gate = apply_linear(x, p["wg"], dget(d, "wg"))
+    up = apply_linear(x, p["wi"], dget(d, "wi"))
+    h = (jax.nn.silu(gate) if act == "silu" else jax.nn.gelu(gate)) * up
+    return apply_linear(h, p["wo"], dget(d, "wo"))
+
+
+def depthwise_conv1d(x, w, state=None):
+    """Causal depthwise conv. x [B,S,C], w [W,C]; state [B,W-1,C] or None.
+
+    Returns (y [B,S,C], new_state [B,W-1,C]).
+    """
+    W = w.shape[0]
+    B, S, C = x.shape
+    if state is None:
+        state = jnp.zeros((B, W - 1, C), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)            # [B, S+W-1, C]
+    y = jnp.zeros((B, S, C), jnp.float32)
+    for i in range(W):
+        y = y + xp[:, i:i + S].astype(jnp.float32) * w[i].astype(jnp.float32)
+    new_state = xp[:, -(W - 1):] if W > 1 else state
+    return y.astype(x.dtype), new_state

@@ -1,0 +1,89 @@
+"""Mixture-of-Experts FFN with capacity-based top-k dispatch.
+
+TPU-idiomatic dense dispatch (GSPMD-style): tokens are scattered into a
+fixed-capacity per-expert buffer ``[E, C, d]``, every expert runs one dense
+einsum (MXU-friendly; experts sharded on the ``model``/EP axis), and results
+are gathered back with the router weights. Overflowing assignments are
+dropped (standard capacity-factor semantics).
+
+Expert weights are stacked ``[E, d_in, d_out]`` — the DeltaDQ pipeline
+compresses them per expert through the same PackedDelta machinery (the
+stacked leading dim is carried through pack/reconstruct).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.arch import ArchConfig
+from repro.core.apply import apply_linear_batched, dget
+
+
+def router_topk(logits: jnp.ndarray, top_k: int):
+    """logits [T, E] -> (weights [T, K], idx [T, K]); softmax over the top-k."""
+    gates, idx = jax.lax.top_k(logits, top_k)
+    weights = jax.nn.softmax(gates.astype(jnp.float32), axis=-1)
+    return weights, idx
+
+
+def moe_ffn(x: jnp.ndarray, p: dict, d: Optional[dict], cfg: ArchConfig,
+            capacity_factor: Optional[float] = None) -> jnp.ndarray:
+    """x [B,S,d_model] -> [B,S,d_model]."""
+    m = cfg.moe
+    if capacity_factor is None:
+        capacity_factor = m.capacity_factor
+    B, S, dm = x.shape
+    T, E, K = B * S, m.n_experts, m.top_k
+    xt = x.reshape(T, dm)
+
+    logits = xt @ p["router"]                       # router stays uncompressed
+    weights, eidx = router_topk(logits, K)          # [T,K]
+
+    C = max(int(T * K / E * capacity_factor), 1)
+
+    flat_e = eidx.reshape(-1)                       # [T*K]
+    # position-in-expert via sort, O(TK log TK) time and O(TK) memory.
+    # (The textbook one-hot cumsum is O(TK*E) memory and is counted as
+    # O((TK)^2)-ish flops by XLA's reduce-window model — see EXPERIMENTS.md
+    # §Perf iteration P1.)
+    order = jnp.argsort(flat_e)                     # stable
+    inv = jnp.argsort(order)                        # rank of each assignment
+    sorted_e = flat_e[order]
+    first = jnp.searchsorted(sorted_e, jnp.arange(E))  # first slot per expert
+    pos = inv - first[flat_e]                       # position within expert run
+    keep = pos < C
+    slot_e = jnp.where(keep, flat_e, E)             # overflow -> dummy expert E
+    slot_c = jnp.where(keep, pos, 0)
+
+    tok_of_assign = jnp.repeat(jnp.arange(T), K)    # [T*K]
+    buf = jnp.zeros((E + 1, C, dm), x.dtype)
+    buf = buf.at[slot_e, slot_c].set(xt[tok_of_assign])
+    buf = buf[:E]                                   # [E, C, dm]
+
+    gate = apply_linear_batched(buf, p["wg"], dget(d, "wg"))
+    up = apply_linear_batched(buf, p["wi"], dget(d, "wi"))
+    act = jax.nn.silu(gate) if cfg.act == "silu" else jax.nn.gelu(gate)
+    out = apply_linear_batched(act * up, p["wo"], dget(d, "wo"))  # [E, C, dm]
+
+    # gather back: assignment (t, k) reads out[e, c]
+    out_pad = jnp.concatenate([out, jnp.zeros((1, C, dm), out.dtype)], axis=0)
+    per_assign = out_pad[slot_e, slot_c]            # [T*K, dm] (dropped -> expert E row? no:)
+    per_assign = jnp.where(keep[:, None], per_assign, 0.0)
+    w_assign = weights.reshape(-1)[:, None].astype(per_assign.dtype)
+    y = jnp.zeros((T, dm), per_assign.dtype).at[tok_of_assign].add(per_assign * w_assign)
+
+    if m.shared_expert:
+        from repro.models.layers import glu_mlp
+        y = y + glu_mlp(xt, p["shared"], dget(d, "shared"), cfg.act)
+    return y.reshape(B, S, dm)
+
+
+def aux_load_balance_loss(logits: jnp.ndarray, eidx: jnp.ndarray, n_experts: int) -> jnp.ndarray:
+    """Switch-style load-balancing auxiliary loss (training)."""
+    T = logits.shape[0]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    frac_routed = jnp.mean(jax.nn.one_hot(eidx[:, 0], n_experts), axis=0)
+    frac_prob = jnp.mean(probs, axis=0)
+    return n_experts * jnp.sum(frac_routed * frac_prob)

@@ -1,0 +1,85 @@
+"""RG-LRU recurrent mixer (RecurrentGemma / Griffin).
+
+    r_t = sigmoid(a_gate(x_t));  i_t = sigmoid(i_gate(x_t))
+    a_t = exp(-c * r_t * softplus(-Lambda))        (a = sigmoid(Lambda)^(c r))
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Sequence mixing uses ``jax.lax.associative_scan`` (log-depth); decode is a
+single fused step. Gates are per-channel (diagonal) as in the Griffin
+block-diagonal limit; the three 2-D projections (linear_x/y/out) are the
+DeltaDQ-compressible weights of this block.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.arch import ArchConfig
+from repro.core.apply import apply_linear, dget
+from repro.models.layers import depthwise_conv1d, rmsnorm
+
+_C = 8.0
+
+
+class RecState(NamedTuple):
+    conv: jnp.ndarray   # [B, W-1, lru]
+    h: jnp.ndarray      # [B, lru]
+
+
+def _gates(xb, p):
+    r = jax.nn.sigmoid(xb * p["a_gate_w"].astype(jnp.float32) + p["a_gate_b"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xb * p["i_gate_w"].astype(jnp.float32) + p["i_gate_b"].astype(jnp.float32))
+    log_a = -_C * r * jax.nn.softplus(-p["a_param"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xb)
+    return a, gated_in
+
+
+def rglru_scan(xb: jnp.ndarray, p: dict, h0: Optional[jnp.ndarray]) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """xb [B,S,lru] (f32) -> (h [B,S,lru], h_last [B,lru])."""
+    a, b = _gates(xb, p)
+    if h0 is not None:
+        # fold the carried state into the first step: h_1 = a_1 h_0 + b_1
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h, h[:, -1]
+
+
+def rglru_block(x, p, d, cfg: ArchConfig, state: Optional[RecState] = None,
+                decode: bool = False):
+    """Full recurrent block: conv + gated RG-LRU + output projection.
+
+    x [B,S,d_model] (pre-norm applied by caller is NOT assumed; this block
+    normalizes internally like the attention blocks). Returns (out, state).
+    """
+    B, S, _ = x.shape
+    lru = cfg.rglru.lru_width or cfg.d_model
+    u = rmsnorm(x, p["norm"], cfg.norm_eps)
+    xb = apply_linear(u, p["linear_x"], dget(d, "linear_x"))
+    yb = jax.nn.gelu(apply_linear(u, p["linear_y"], dget(d, "linear_y")).astype(jnp.float32))
+
+    conv_state = state.conv if state is not None else None
+    xb, new_conv = depthwise_conv1d(xb, p["conv_w"], conv_state)
+    xb = (xb + p["conv_b"]).astype(jnp.float32)
+
+    if decode:
+        assert S == 1
+        h0 = state.h if state is not None else jnp.zeros((B, lru), jnp.float32)
+        a, b = _gates(xb[:, 0], p)
+        h_last = a * h0.astype(jnp.float32) + b
+        h = h_last[:, None]
+    else:
+        h0 = state.h if state is not None else None
+        h, h_last = rglru_scan(xb, p, h0)
+
+    out = (h * yb).astype(x.dtype)
+    out = apply_linear(out, p["linear_out"], dget(d, "linear_out"))
+    return out, RecState(new_conv, h_last.astype(jnp.float32))

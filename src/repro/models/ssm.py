@@ -1,0 +1,163 @@
+"""Mamba-2 SSD (state-space duality) mixer, chunked TPU-friendly form.
+
+The chunked algorithm (Dao & Gu 2024, §6): within chunks of length Q the
+recurrence is computed as a masked quadratic attention-like matmul (MXU);
+across chunks a tiny state recurrence [H, P, N] is scanned. Both decode
+(O(1) state update per token) and train/prefill paths are provided.
+
+Projections are split into separate matrices (wz/wx/wB/wC/wdt) rather than
+one fused in_proj so tensor-parallel sharding can put heads on the model
+axis without slicing through semantic boundaries (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.arch import ArchConfig
+from repro.core.apply import apply_linear, dget
+from repro.models.layers import depthwise_conv1d, rmsnorm
+
+
+class SsmState(NamedTuple):
+    conv_x: jnp.ndarray    # [B, W-1, d_inner]
+    conv_bc: jnp.ndarray   # [B, W-1, 2*G*N]
+    state: jnp.ndarray     # [B, H, P, N]
+
+
+def dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    return d_inner, H, s.head_dim, s.d_state, s.n_groups
+
+
+def _segsum_mask(dA_cum: jnp.ndarray) -> jnp.ndarray:
+    """L[..., i, j] = exp(dA_cum_i - dA_cum_j) for j <= i else 0.
+
+    dA_cum [..., l, h] -> [..., h, l, l]
+    """
+    c = jnp.moveaxis(dA_cum, -1, -2)                       # [..., h, l]
+    diff = c[..., :, None] - c[..., None, :]               # [..., h, i, j]
+    l = c.shape[-1]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, initial_state=None):
+    """Full-sequence SSD.
+
+    x [b,s,h,p]; dt [b,s,h] (post-softplus); A [h] (negative);
+    B, C [b,s,g,n].  Returns (y [b,s,h,p], final_state [b,h,p,n]).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[-2:]
+    hpg = h // g
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    xr = x.reshape(b, nc, chunk, h, p).astype(jnp.float32)
+    dtr = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Br = B.reshape(b, nc, chunk, g, n).astype(jnp.float32)
+    Cr = C.reshape(b, nc, chunk, g, n).astype(jnp.float32)
+
+    dA = dtr * A.astype(jnp.float32)                       # [b,nc,l,h]
+    dA_cum = jnp.cumsum(dA, axis=2)
+
+    # --- intra-chunk (quadratic within chunk, MXU) ---
+    L = _segsum_mask(dA_cum)                               # [b,nc,h,l,l]
+    # scores over shared B/C groups; expand group to its heads
+    CB = jnp.einsum("bclgn,bcmgn->bcglm", Cr, Br)          # [b,nc,g,l,m]
+    CB = jnp.repeat(CB, hpg, axis=2)                       # [b,nc,h,l,m]
+    att = CB * L * jnp.moveaxis(dtr, -1, -2)[..., None, :]  # * dt_j
+    y_intra = jnp.einsum("bchlm,bcmhp->bclhp", att, xr)
+
+    # --- chunk states ---
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)  # [b,nc,l,h]
+    weighted_x = xr * (dtr * decay_to_end)[..., None]      # [b,nc,l,h,p]
+    Bh = jnp.repeat(Br, hpg, axis=3)                       # [b,nc,l,h,n]
+    chunk_states = jnp.einsum("bclhp,bclhn->bchpn", weighted_x, Bh)
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])             # [b,nc,h]
+
+    init = (jnp.zeros((b, h, p, n), jnp.float32) if initial_state is None
+            else initial_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        st, cd = inp
+        new = carry * cd[..., None, None] + st
+        return new, carry                                   # emit state at chunk START
+
+    final, states_before = jax.lax.scan(
+        step,
+        init,
+        (jnp.moveaxis(chunk_states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    states_before = jnp.moveaxis(states_before, 0, 1)       # [b,nc,h,p,n]
+
+    # --- inter-chunk contribution ---
+    Ch = jnp.repeat(Cr, hpg, axis=3)                        # [b,nc,l,h,n]
+    y_inter = jnp.einsum("bclhn,bchpn->bclhp", Ch * jnp.exp(dA_cum)[..., None], states_before)
+
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y.astype(x.dtype), final
+
+
+def ssd_decode(x, dt, A, B, C, state):
+    """One-token SSD update. x [b,h,p]; dt [b,h]; B,C [b,g,n]; state [b,h,p,n]."""
+    g = B.shape[-2]
+    hpg = x.shape[1] // g
+    Bh = jnp.repeat(B, hpg, axis=1).astype(jnp.float32)     # [b,h,n]
+    Ch = jnp.repeat(C, hpg, axis=1).astype(jnp.float32)
+    dA = jnp.exp(dt.astype(jnp.float32) * A.astype(jnp.float32))  # [b,h]
+    upd = (dt.astype(jnp.float32) * 1.0)[..., None, None] * \
+          x.astype(jnp.float32)[..., None] * Bh[..., None, :]     # [b,h,p,n]
+    new_state = state * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    return y.astype(x.dtype), new_state
+
+
+def mamba_block(x, p, d, cfg: ArchConfig, state: Optional[SsmState] = None,
+                decode: bool = False):
+    """Full Mamba-2 block. x [B,S,d_model] (S=1 when decode=True).
+
+    Returns (out [B,S,d_model], new_state).
+    """
+    s_cfg = cfg.ssm
+    d_inner, H, P, N, G = *dims(cfg)[:4], cfg.ssm.n_groups
+    B_, S, _ = x.shape
+
+    u = rmsnorm(x, p["norm"], cfg.norm_eps)
+    z = apply_linear(u, p["wz"], dget(d, "wz"))
+    xin = apply_linear(u, p["wx"], dget(d, "wx"))
+    bc = apply_linear(u, p["wbc"], dget(d, "wbc"))          # [B,S,2*G*N]
+    dt = apply_linear(u, p["wdt"], dget(d, "wdt"))          # [B,S,H]
+
+    conv_x_state = state.conv_x if state is not None else None
+    conv_bc_state = state.conv_bc if state is not None else None
+    xin, new_conv_x = depthwise_conv1d(xin, p["conv_x_w"], conv_x_state)
+    bc, new_conv_bc = depthwise_conv1d(bc, p["conv_bc_w"], conv_bc_state)
+    xin = jax.nn.silu(xin + p["conv_x_b"])
+    bc = jax.nn.silu(bc + p["conv_bc_b"])
+
+    Bmat = bc[..., : G * N].reshape(B_, S, G, N)
+    Cmat = bc[..., G * N:].reshape(B_, S, G, N)
+    xh = xin.reshape(B_, S, H, P)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    if decode:
+        assert S == 1
+        prev = state.state if state is not None else jnp.zeros((B_, H, P, N), jnp.float32)
+        y, new_state = ssd_decode(xh[:, 0], dt[:, 0], A, Bmat[:, 0], Cmat[:, 0], prev)
+        y = y[:, None]
+    else:
+        init = state.state if state is not None else None
+        y, new_state = ssd_chunked(xh, dt.astype(xh.dtype), A, Bmat, Cmat,
+                                   min(s_cfg.chunk, S), initial_state=init)
+
+    y = y + xh.astype(jnp.float32)[...] * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B_, S, d_inner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), p["out_norm"], cfg.norm_eps)
+    out = apply_linear(y, p["wout"], dget(d, "wout"))
+    return out, SsmState(new_conv_x, new_conv_bc, new_state)

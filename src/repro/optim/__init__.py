@@ -1,0 +1,4 @@
+from repro.optim import adamw, schedule
+from repro.optim.adamw import AdamWConfig
+
+__all__ = ["adamw", "schedule", "AdamWConfig"]

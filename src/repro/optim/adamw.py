@@ -1,0 +1,92 @@
+"""AdamW with decoupled weight decay, global-norm clipping and fp32 master
+params — written from scratch (no optax in this environment).
+
+State layout (a pytree mirroring params):
+    {"m": .., "v": .., "master": fp32 params, "step": i32 scalar}
+
+``update`` consumes grads in param dtype, runs moments in fp32, applies the
+schedule, and casts back. Master fp32 params make bf16 training stable.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: Optional[Callable] = None   # step -> multiplier
+
+
+def init(params: Any) -> dict:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {
+        "m": zeros,
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "master": jax.tree.map(lambda p: p.astype(jnp.float32), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def state_specs(param_specs: Any) -> dict:
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(f32, param_specs),
+        "v": jax.tree.map(f32, param_specs),
+        "master": jax.tree.map(f32, param_specs),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def _decay_mask(path: str) -> float:
+    """No weight decay on norms / biases / 1-D params (by convention)."""
+    toks = path.lower()
+    if any(t in toks for t in ("norm", "ln", "bias", "scale", "a_param", "gate")):
+        return 0.0
+    return 1.0
+
+
+def update(cfg: AdamWConfig, params: Any, grads: Any, state: dict):
+    """Returns (new_params, new_state, metrics)."""
+    from repro.utils import map_with_paths
+
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    mult = cfg.schedule(step) if cfg.schedule is not None else 1.0
+    lr = cfg.lr * mult
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    new_m = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g, state["m"], grads)
+    new_v = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g, state["v"], grads)
+
+    def upd(path, master, m, v):
+        mh = m / b1c
+        vh = v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * _decay_mask(path) * master
+        return master - lr * delta
+
+    new_master = map_with_paths(upd, state["master"], new_m, new_v)
+    new_params = jax.tree.map(lambda p, mst: mst.astype(p.dtype), params, new_master)
+    new_state = {"m": new_m, "v": new_v, "master": new_master, "step": step}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

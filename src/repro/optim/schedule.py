@@ -1,0 +1,25 @@
+"""LR schedules (multipliers over base LR)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(warmup: int, total: int, min_frac: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(warmup, 1)
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+    return fn
+
+
+def constant():
+    return lambda step: jnp.float32(1.0)
+
+
+def inverse_sqrt(warmup: int):
+    def fn(step):
+        step = jnp.maximum(step.astype(jnp.float32), 1.0)
+        return jnp.minimum(step / jnp.maximum(warmup, 1), jnp.sqrt(warmup / step))
+    return fn

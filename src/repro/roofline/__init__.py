@@ -1,0 +1,9 @@
+from repro.roofline.analysis import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    Roofline,
+    collective_bytes,
+    from_compiled,
+    model_flops_for,
+)

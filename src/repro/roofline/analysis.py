@@ -1,0 +1,146 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs
+    memory     = HLO_bytes_per_device / HBM_bandwidth
+    collective = collective_bytes_per_device / ICI_link_bandwidth
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (per-device program
+after SPMD partitioning). Collective bytes are NOT in cost_analysis: we
+parse the optimized HLO text and sum the tensor sizes moved by every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+Convention (documented): bytes = result size for gather/reduce-like ops,
+operand size for reduce-scatter — a within-2x proxy for wire bytes that is
+consistent across iterations of the perf loop, which is what matters.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+import numpy as np
+
+# TPU v5e per chip (task-provided constants)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# `%x = bf16[4,128]{1,0} all-gather(...)` / tuple results `= (f32[..], ...)`
+_OP_RE = re.compile(
+    r"=\s*\(?\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?\s"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _size_bytes(dtype: str, dims: str) -> float:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum per-device bytes moved by collectives in optimized HLO text."""
+    out = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        dtype, dims, op = m.groups()
+        # ignore the -done halves of async pairs (bytes counted at -start)
+        if "-done(" in m.group(0):
+            continue
+        out[op] += _size_bytes(dtype, dims)
+        counts[op] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": float(sum(out.values()))}
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per device
+    bytes_accessed: float        # per device
+    coll_bytes: float            # per device
+    model_flops: float           # 6ND / 2ND useful-work reference (per device)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs: remat/redundancy waste detector."""
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_frac(self) -> float:
+        """Fraction of the compute roofline achievable at the bound:
+        (useful FLOP time) / (time of the dominant term)."""
+        t_useful = self.model_flops / PEAK_FLOPS
+        return t_useful / self.t_bound if self.t_bound else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops,
+            "bytes_per_device": self.bytes_accessed,
+            "collective_bytes_per_device": self.coll_bytes,
+            "model_flops_per_device": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_frac": self.useful_flops_frac,
+            "roofline_frac": self.roofline_frac,
+        }
+
+
+def model_flops_for(kind: str, n_params: int, n_active: int, tokens: int,
+                    n_devices: int) -> float:
+    """6ND for training, 2ND for inference (active params for MoE)."""
+    per_tok = 6 * n_active if kind == "train" else 2 * n_active
+    return per_tok * tokens / n_devices
+
+
+def from_compiled(compiled, lowered_text: Optional[str], kind: str,
+                  n_params: int, n_active: int, tokens: int,
+                  n_devices: int) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    text = compiled.as_text() if lowered_text is None else lowered_text
+    coll = collective_bytes(text)
+    return Roofline(
+        flops=flops,
+        bytes_accessed=byts,
+        coll_bytes=coll["total_bytes"],
+        model_flops=model_flops_for(kind, n_params, n_active, tokens, n_devices),
+    )

@@ -1,0 +1,3 @@
+from repro.serve.engine import DeltaStore, Engine, Tenant
+
+__all__ = ["DeltaStore", "Engine", "Tenant"]

@@ -1,0 +1,3 @@
+from repro.train.train_step import make_eval_step, make_loss, make_train_step
+
+__all__ = ["make_eval_step", "make_loss", "make_train_step"]

@@ -1,0 +1,79 @@
+"""Training step: loss -> grads -> AdamW, with gradient accumulation.
+
+``make_train_step(cfg, opt_cfg, n_micro)`` returns a pure function
+    (params, opt_state, batch, rng) -> (params, opt_state, metrics)
+suitable for ``jax.jit`` with in/out shardings from ``repro.dist``.
+
+Microbatching: the global batch [B, S] is split into ``n_micro`` chunks and
+scanned, accumulating fp32 grads. Besides memory, this is the main
+compute/communication overlap lever at scale: XLA's latency-hiding
+scheduler overlaps each microbatch's backward with the previous gradient
+all-reduce chunk (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.arch import ArchConfig
+from repro.models import lm
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig
+
+
+def make_loss(cfg: ArchConfig, remat: bool = True):
+    def loss(params, batch):
+        return lm.loss_fn(cfg, params, batch, remat=remat)
+    return loss
+
+
+def _split_micro(batch: dict, n_micro: int) -> dict:
+    def sp(x):
+        b = x.shape[0]
+        assert b % n_micro == 0, (b, n_micro)
+        return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+    return jax.tree.map(sp, batch)
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig, n_micro: int = 1,
+                    remat: bool = True,
+                    grad_transform: Optional[Callable] = None):
+    """grad_transform: optional fn(grads) -> grads applied before the
+    optimizer (e.g. the int8 compressed all-reduce in repro.dist)."""
+    loss_fn = make_loss(cfg, remat=remat)
+
+    def step(params, opt_state, batch, rng):
+        del rng  # data pipeline is deterministic; kept for API stability
+
+        def one_micro(carry, mb):
+            acc, _ = carry
+            (l, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+            grads = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), acc, grads)
+            return (grads, l), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        if n_micro == 1:
+            (l, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            mbs = _split_micro(batch, n_micro)
+            (grads, l), _ = jax.lax.scan(one_micro, (zeros, jnp.float32(0)), mbs)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+
+        params, opt_state, opt_metrics = adamw.update(opt_cfg, params, grads, opt_state)
+        metrics = {"loss": l, **opt_metrics}
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_eval_step(cfg: ArchConfig):
+    def step(params, batch, deltas=None):
+        loss, metrics = lm.loss_fn(cfg, params, batch, deltas=deltas)
+        return metrics
+    return step

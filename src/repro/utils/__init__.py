@@ -1,0 +1,15 @@
+from repro.utils.pytree import (
+    flatten_with_paths,
+    map_with_paths,
+    path_str,
+    tree_bytes,
+    tree_params,
+)
+
+__all__ = [
+    "flatten_with_paths",
+    "map_with_paths",
+    "path_str",
+    "tree_bytes",
+    "tree_params",
+]

@@ -1,0 +1,58 @@
+"""Pytree path utilities shared across the framework.
+
+Params, deltas, shardings and checkpoints all address leaves by a
+"/"-joined path string, e.g. ``"blocks/attn/wq"``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+
+def _key_str(k) -> str:
+    if isinstance(k, jax.tree_util.DictKey):
+        return str(k.key)
+    if isinstance(k, jax.tree_util.SequenceKey):
+        return str(k.idx)
+    if isinstance(k, jax.tree_util.GetAttrKey):
+        return str(k.name)
+    if isinstance(k, jax.tree_util.FlattenedIndexKey):
+        return str(k.key)
+    return str(k)
+
+
+def path_str(path) -> str:
+    return "/".join(_key_str(k) for k in path)
+
+
+def flatten_with_paths(tree: Any, is_leaf: Callable | None = None) -> dict[str, Any]:
+    """Flatten a pytree into {path: leaf}."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_leaf)[0]
+    return {path_str(p): v for p, v in leaves}
+
+
+def map_with_paths(fn: Callable[[str, Any], Any], tree: Any, *rest: Any, is_leaf=None) -> Any:
+    """tree_map where fn also receives the path string of each leaf."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x, *r: fn(path_str(p), x, *r), tree, *rest, is_leaf=is_leaf
+    )
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total bytes of all array leaves (works on ShapeDtypeStruct too)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            total += int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+    return total
+
+
+def tree_params(tree: Any) -> int:
+    """Total element count of all array leaves."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if hasattr(leaf, "shape"):
+            total += int(np.prod(leaf.shape))
+    return total

@@ -1,0 +1,31 @@
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_subprocess(code: str, n_devices: int = 8, timeout: int = 600):
+    """Run a python snippet in a fresh process with N fake CPU devices.
+
+    Multi-device tests (shard_map collectives, mesh restore) can't run in
+    the main pytest process: jax pins the device count at first init.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env["JAX_PLATFORMS"] = "cpu"
+    res = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=timeout, env=env)
+    if res.returncode != 0:
+        raise AssertionError(f"subprocess failed:\nSTDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr[-4000:]}")
+    return res.stdout
+
+
+@pytest.fixture
+def subproc():
+    return run_subprocess

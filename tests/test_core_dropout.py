@@ -1,0 +1,95 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    bernoulli_dropout_dense,
+    groupwise_dropout_mask,
+    groupwise_dropout_pack,
+    reconstruct_dense,
+)
+
+
+def test_exact_keep_count_per_group():
+    rng = jax.random.PRNGKey(0)
+    d = jax.random.normal(rng, (256, 32))
+    p = groupwise_dropout_pack(rng, d, h_g=64, alpha=8)
+    dense = np.asarray(reconstruct_dense(p))
+    nz = (dense.reshape(4, 64, 32) != 0).sum(axis=1)
+    assert nz.min() == nz.max() == 8  # exactly h_g/alpha survivors per group
+
+
+def test_mask_exact_count():
+    m = groupwise_dropout_mask(jax.random.PRNGKey(1), 128, 16, 32, 4.0)
+    counts = np.asarray(m).reshape(4, 32, 16).sum(axis=1)
+    assert (counts == 8).all()
+
+
+def test_rescale_unbiased():
+    """E[compressed] == delta elementwise (alpha rescale).
+
+    Per-element std of one draw is 3*sqrt(alpha-1); after n draws it is
+    3*sqrt(3)/sqrt(n). Check the grand mean tightly and elements at 5 sigma.
+    """
+    rng = jax.random.PRNGKey(2)
+    d = jnp.ones((64, 8)) * 3.0
+    acc = jnp.zeros_like(d)
+    n = 200
+    for i in range(n):
+        p = groupwise_dropout_pack(jax.random.fold_in(rng, i), d, h_g=16, alpha=4)
+        acc = acc + reconstruct_dense(p)
+    mean = np.asarray(acc / n)
+    sigma = 3.0 * np.sqrt(3.0) / np.sqrt(n)
+    assert abs(mean.mean() - 3.0) < 4 * sigma / np.sqrt(mean.size)
+    assert np.abs(mean - 3.0).max() < 5 * sigma
+
+
+def test_matches_bernoulli_variant_layer_error():
+    """Exact-count structured dropout == paper's Bernoulli mask statistically:
+    layer-wise output error within 10% across seeds."""
+    rng = jax.random.PRNGKey(3)
+    h_in, h_out, t = 512, 64, 32
+    d = jax.random.normal(rng, (h_in, h_out)) * 0.01
+    x = jax.random.normal(jax.random.fold_in(rng, 9), (t, h_in))
+    y = x @ d
+
+    def err_exact(seed):
+        p = groupwise_dropout_pack(jax.random.PRNGKey(seed), d, h_g=h_in, alpha=8)
+        return float(jnp.linalg.norm(x @ reconstruct_dense(p) - y))
+
+    def err_bern(seed):
+        dd = bernoulli_dropout_dense(jax.random.PRNGKey(seed + 1000), d, alpha=8)
+        return float(jnp.linalg.norm(x @ dd - y))
+
+    e1 = np.mean([err_exact(s) for s in range(20)])
+    e2 = np.mean([err_bern(s) for s in range(20)])
+    assert abs(e1 - e2) / e2 < 0.1
+
+
+def test_full_output_error_small():
+    """The paper's losslessness argument: the delta contribution is small
+    next to the base output, and the dropout error is zero-mean — so the
+    error of the FULL layer output x(W_b + d_hat) vs x(W_b + d) is tiny even
+    at alpha=8, while the delta-only relative error is ~sqrt(alpha-1)."""
+    rng = jax.random.PRNGKey(4)
+    h_in = 1024
+    w_b = jax.random.normal(jax.random.fold_in(rng, 2), (h_in, 16)) * 0.05
+    d = jax.random.normal(rng, (h_in, 16)) * 0.002   # SFT-scale delta
+    x = jax.random.normal(jax.random.fold_in(rng, 1), (8, h_in))
+    p = groupwise_dropout_pack(rng, d, h_g=64, alpha=8)
+    y_full = x @ (w_b + d)
+    y_hat = x @ (w_b + reconstruct_dense(p))
+    rel_full = float(jnp.linalg.norm(y_full - y_hat) / jnp.linalg.norm(y_full))
+    rel_delta = float(jnp.linalg.norm(x @ d - x @ reconstruct_dense(p)) /
+                      jnp.linalg.norm(x @ d))
+    assert rel_full < 0.25, rel_full
+    assert rel_delta > 1.0  # delta-only error is large; full output is not
+
+
+def test_bad_args():
+    d = jnp.zeros((64, 8))
+    with pytest.raises(ValueError):
+        groupwise_dropout_pack(jax.random.PRNGKey(0), d, h_g=48, alpha=8)
+    with pytest.raises(ValueError):
+        groupwise_dropout_pack(jax.random.PRNGKey(0), d, h_g=4, alpha=8.0)

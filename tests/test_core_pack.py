@@ -1,0 +1,71 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    PackedDelta,
+    from_storage_parts,
+    groupwise_dropout_pack,
+    reconstruct_dense,
+    to_storage_parts,
+)
+
+
+def _pack(h_in=256, h_out=32, h_g=64, alpha=8, k=4, m=4, seed=0):
+    rng = jax.random.PRNGKey(seed)
+    d = jax.random.normal(rng, (h_in, h_out)) * 0.01
+    return groupwise_dropout_pack(rng, d, h_g=h_g, alpha=alpha, k_bits=k, m=m)
+
+
+@pytest.mark.parametrize("k,m", [(4, 1), (4, 4), (4, 8), (8, 8), (2, 2), (1, 1)])
+def test_storage_parts_roundtrip(k, m):
+    p = _pack(k=k, m=m)
+    parts = to_storage_parts(p)
+    assert len(parts) == m
+    # supports are disjoint and complete
+    total = sum(len(q.low_codes) for q in parts)
+    assert total == p.nnz
+    p2 = from_storage_parts(parts, h_in=p.h_in, h_out=p.h_out, h_g=p.h_g,
+                            keep=p.keep, alpha=p.alpha, k_bits=k,
+                            scale=p.scale, zero=p.zero)
+    np.testing.assert_array_equal(np.asarray(reconstruct_dense(p)),
+                                  np.asarray(reconstruct_dense(p2)))
+
+
+def test_low_code_bit_width():
+    p = _pack(k=4, m=8)
+    for part in to_storage_parts(p):
+        if len(part.low_codes):
+            assert part.low_codes.max() <= 2**4 // 8 - 1  # 1-bit storage
+
+
+def test_bits_accounting():
+    p = _pack(h_in=512, h_out=64, h_g=64, alpha=8, k=4, m=8)
+    # value bits: nnz * (k - log2 m) = nnz * 1
+    assert p.value_bits() == pytest.approx(p.nnz * 1.0)
+    # index bits: log2(h_g) per nnz
+    assert p.index_bits() == pytest.approx(p.nnz * 6.0)
+    assert p.total_bits() == pytest.approx(p.nnz * 7.0)
+
+
+def test_stacked_pack_and_index():
+    rng = jax.random.PRNGKey(1)
+    d = jax.random.normal(rng, (3, 128, 16)) * 0.01   # stacked (layers)
+    p = groupwise_dropout_pack(rng, d, h_g=32, alpha=4, k_bits=4)
+    assert p.stack_shape() == (3,)
+    assert p.scale.shape == (3,)
+    dense = reconstruct_dense(p)
+    assert dense.shape == (3, 128, 16)
+    one = p.index(1)
+    np.testing.assert_allclose(np.asarray(reconstruct_dense(one)),
+                               np.asarray(dense[1]), rtol=1e-6)
+
+
+def test_pytree_registration():
+    p = _pack()
+    leaves = jax.tree.leaves(p)
+    assert len(leaves) == 4
+    p2 = jax.tree.map(lambda x: x, p)
+    assert isinstance(p2, PackedDelta)
+    assert p2.h_g == p.h_g

@@ -1,0 +1,66 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+
+
+@pytest.mark.parametrize("k", [1, 2, 4, 8])
+def test_quant_dequant_bounds(k):
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 32)) * 0.02
+    q, qp = quant.quantize(x, k)
+    assert int(q.min()) >= 0 and int(q.max()) <= 2**k - 1
+    err = jnp.max(jnp.abs(quant.dequantize(q, qp) - x))
+    # uniform quant error bounded by one step
+    assert float(err) <= float(qp.scale) * 1.01
+
+
+def test_quant_lead_dims_independent_scales():
+    noise = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8))
+    x = jnp.stack([noise[0] * 0.001, noise[1] * 10.0])  # spans differ 1e4x
+    q, qp = quant.quantize(x, 4, lead_dims=1)
+    assert qp.scale.shape == (2,)
+    assert float(qp.scale[0]) * 100 < float(qp.scale[1])
+
+
+@pytest.mark.parametrize("k,m", [(4, 1), (4, 4), (4, 16), (8, 8), (2, 2), (1, 1)])
+def test_separate_quantization_invertible(k, m):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.integers(0, 2**k, (33, 17)), jnp.int32)
+    pid, low = quant.decompose(q, k, m)
+    assert int(low.max()) <= 2**k // m - 1
+    back = quant.recompose(pid, low, k, m)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(q))
+
+
+def test_compression_ratio_paper_settings():
+    # paper: 8x dropout + k=4, m=8 -> 1-bit storage -> 128x
+    assert quant.compression_ratio(8, 4, 8) == pytest.approx(128.0)
+    # 32x dropout + k=4, m=8 -> 512x (WizardMath-70B row)
+    assert quant.compression_ratio(32, 4, 8) == pytest.approx(512.0)
+    # dropout only
+    assert quant.compression_ratio(16, None) == 16.0
+    # degenerate "-" row: m == 2^k
+    assert quant.compression_ratio(8, 4, 16) == float("inf")
+
+
+@settings(max_examples=30, deadline=None)
+@given(k=st.sampled_from([1, 2, 4, 8]),
+       n=st.integers(1, 40), cols=st.integers(1, 7))
+def test_pack_unpack_roundtrip(k, n, cols):
+    rng = np.random.default_rng(n * 8 + k)
+    q = jnp.asarray(rng.integers(0, 2**k, (n, cols)), jnp.int32)
+    packed = quant.pack_bits(q, k, axis=0)
+    assert packed.dtype == jnp.uint8
+    assert packed.shape[0] == quant.packed_len(n, k)
+    back = quant.unpack_bits(packed, k, n, axis=0)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(q))
+
+
+def test_pack_axis1():
+    q = jnp.asarray(np.random.default_rng(0).integers(0, 4, (3, 9, 5)), jnp.int32)
+    packed = quant.pack_bits(q, 2, axis=1)
+    back = quant.unpack_bits(packed, 2, 9, axis=1)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(q))

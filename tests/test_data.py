@@ -1,0 +1,42 @@
+import numpy as np
+
+from repro.data import MemmapTokens, PretrainMixture, SortTask, SyntheticLM
+from repro.data.pipeline import EOS, PAD, SEP
+
+
+def test_determinism_all_sources(tmp_path):
+    for src in (SyntheticLM(100, 16, 4, seed=1), PretrainMixture(100, 16, 4, seed=1),
+                SortTask(100, 32, 4, seed=1)):
+        b1, b2 = src.batch_at(5), src.batch_at(5)
+        for k in b1:
+            np.testing.assert_array_equal(b1[k], b2[k])
+        b3 = src.batch_at(6)
+        assert any((b1[k] != b3[k]).any() for k in b1)
+
+
+def test_memmap_tokens(tmp_path):
+    data = np.arange(1000, dtype=np.int32) % 50
+    p = tmp_path / "toks.bin"
+    data.tofile(p)
+    src = MemmapTokens(str(p), seq_len=8, batch=4, seed=0)
+    b = src.batch_at(0)
+    assert b["tokens"].shape == (4, 8)
+    np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+
+
+def test_sort_task_structure():
+    task = SortTask(vocab=64, seq_len=32, batch=8, n_digits=6, seed=0)
+    b = task.batch_at(0)
+    toks, labels, mask = b["tokens"], b["labels"], b["loss_mask"]
+    for r in range(8):
+        sep_pos = int(np.where(toks[r] == SEP)[0][0])
+        assert sep_pos == 6
+        sorted_part = toks[r, sep_pos + 1: sep_pos + 7]
+        np.testing.assert_array_equal(sorted_part, np.sort(toks[r, :6]))
+        assert toks[r, sep_pos + 7] == EOS
+        # loss only on the completion span
+        assert mask[r, :6].sum() == 0
+        assert mask[r, 6:13].sum() == 7
+
+    prompts, targets = task.prompts_at(0)
+    np.testing.assert_array_equal(np.sort(prompts[:, :6], axis=1), targets)

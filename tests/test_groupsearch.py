@@ -1,0 +1,57 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DeltaDQSpec, candidate_group_sizes, search_direct, search_proxy
+
+
+def test_candidates():
+    assert candidate_group_sizes(256, 8) == [8, 16, 32, 64, 128, 256]
+    assert candidate_group_sizes(96, 4)[-1] == 96
+    for c in candidate_group_sizes(96, 4):
+        assert 96 % c == 0
+
+
+def test_proxy_search_runs_and_prefers_low_error():
+    rng = jax.random.PRNGKey(0)
+    d_model = 128
+    wq_b = jax.random.normal(rng, (d_model, 64)) * 0.1
+    wk_b = jax.random.normal(jax.random.fold_in(rng, 1), (d_model, 64)) * 0.1
+    wq_f = wq_b + jax.random.normal(jax.random.fold_in(rng, 2), wq_b.shape) * 0.01
+    wk_f = wk_b + jax.random.normal(jax.random.fold_in(rng, 3), wk_b.shape) * 0.01
+    x = jax.random.normal(jax.random.fold_in(rng, 4), (16, d_model))
+    spec = DeltaDQSpec(alpha=4.0, k_bits=None)
+    res = search_proxy(x, wq_b, wk_b, wq_f, wk_f, spec)
+    assert res.h_g_star in candidate_group_sizes(d_model, 4)
+    assert res.errors[res.h_g_star] == min(res.errors.values())
+    assert res.method == "proxy"
+
+
+def test_direct_search_api():
+    # direct search over a known convex-ish score
+    scores = {4: 3.0, 8: 1.0, 16: 2.0, 32: 5.0, 64: 6.0, 128: 7.0}
+    res = search_direct(lambda hg: scores[hg], 128, DeltaDQSpec(alpha=4.0))
+    assert res.h_g_star == 8
+    assert res.method == "direct"
+
+
+def test_proxy_agrees_with_direct_on_layer_error():
+    """When the direct objective IS the attention error, both must agree."""
+    rng = jax.random.PRNGKey(7)
+    d_model = 64
+    wq_b = jax.random.normal(rng, (d_model, 32)) * 0.1
+    wk_b = jax.random.normal(jax.random.fold_in(rng, 1), (d_model, 32)) * 0.1
+    wq_f = wq_b + jax.random.normal(jax.random.fold_in(rng, 2), wq_b.shape) * 0.02
+    wk_f = wk_b + jax.random.normal(jax.random.fold_in(rng, 3), wk_b.shape) * 0.02
+    x = jax.random.normal(jax.random.fold_in(rng, 4), (8, d_model))
+    spec = DeltaDQSpec(alpha=4.0, seed=0)
+
+    proxy = search_proxy(x, wq_b, wk_b, wq_f, wk_f, spec)
+
+    from repro.core.groupsearch import attention_proxy_error
+    direct = search_direct(
+        lambda hg: float(attention_proxy_error(x, wq_b, wk_b, wq_f, wk_f, hg, spec,
+                                               jax.random.fold_in(jax.random.PRNGKey(0), hg))),
+        d_model, spec)
+    assert proxy.h_g_star == direct.h_g_star

@@ -1,0 +1,101 @@
+"""Pallas kernel validation: interpret-mode vs pure-jnp oracles.
+
+Sweeps shapes/dtypes per the deliverable; hypothesis drives random
+envelope-internal configurations.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import groupwise_dropout_pack
+from repro.kernels import ops, ref
+
+SWEEP = [
+    # (T, h_in, h_out, h_g, alpha, k_bits)
+    (64, 256, 128, 64, 8, 4),
+    (32, 512, 256, 128, 4, 8),
+    (128, 256, 384, 32, 2, 2),
+    (16, 128, 128, 16, 8, 1),
+    (8, 64, 96, 16, 4, None),
+    (100, 256, 96, 256, 16, 4),     # padding path (T not multiple of tile)
+    (1, 128, 64, 32, 4, 4),         # decode shape (T=1)
+]
+
+
+def _pack(h_in, h_out, h_g, alpha, k, seed=0, scale=0.01):
+    rng = jax.random.PRNGKey(seed)
+    d = jax.random.normal(rng, (h_in, h_out)) * scale
+    return groupwise_dropout_pack(rng, d, h_g=h_g, alpha=alpha, k_bits=k)
+
+
+@pytest.mark.parametrize("T,h_in,h_out,h_g,alpha,k", SWEEP)
+def test_delta_spmm_vs_ref(T, h_in, h_out, h_g, alpha, k):
+    p = _pack(h_in, h_out, h_g, alpha, k)
+    x = jax.random.normal(jax.random.PRNGKey(1), (T, h_in))
+    np.testing.assert_allclose(np.asarray(ops.delta_spmm(x, p, interpret=True)),
+                               np.asarray(ref.delta_spmm_ref(x, p)),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("T,h_in,h_out,h_g,alpha,k", SWEEP[:5])
+def test_fused_base_delta_vs_ref(T, h_in, h_out, h_g, alpha, k):
+    p = _pack(h_in, h_out, h_g, alpha, k)
+    x = jax.random.normal(jax.random.PRNGKey(1), (T, h_in))
+    w = jax.random.normal(jax.random.PRNGKey(2), (h_in, h_out)) * 0.05
+    np.testing.assert_allclose(np.asarray(ops.fused_base_delta(x, w, p, interpret=True)),
+                               np.asarray(ref.fused_base_delta_ref(x, w, p)),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("T,h_in,h_out,h_g,alpha,k", SWEEP[:5])
+def test_dequant_vs_ref(T, h_in, h_out, h_g, alpha, k):
+    p = _pack(h_in, h_out, h_g, alpha, k)
+    np.testing.assert_allclose(np.asarray(ops.dequant(p, interpret=True)),
+                               np.asarray(ref.dequant_tile_ref(p)),
+                               atol=1e-6, rtol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dtype_sweep(dtype):
+    p = _pack(256, 128, 64, 8, 4)
+    x = jax.random.normal(jax.random.PRNGKey(3), (32, 256)).astype(dtype)
+    got = ops.delta_spmm(x, p, interpret=True)
+    want = ref.delta_spmm_ref(x.astype(jnp.float32), p)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=0.05 if dtype == jnp.bfloat16 else 1e-4,
+                               rtol=0.05 if dtype == jnp.bfloat16 else 1e-4)
+
+
+def test_fallback_outside_envelope():
+    # h_g > MAX_HG routes to the XLA fallback and still matches the oracle
+    p = _pack(1024, 32, 1024, 8, 4)
+    assert not ops.kernel_supported(p)
+    x = jax.random.normal(jax.random.PRNGKey(4), (8, 1024))
+    np.testing.assert_allclose(np.asarray(ops.delta_spmm(x, p, interpret=True)),
+                               np.asarray(ref.delta_spmm_ref(x, p)),
+                               atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    t_exp=st.integers(0, 6),
+    g_exp=st.integers(0, 3),
+    hg_exp=st.integers(4, 8),
+    alpha=st.sampled_from([2, 4, 8, 16]),
+    k=st.sampled_from([1, 2, 4, 8, None]),
+    ho_mult=st.integers(1, 3),
+)
+def test_kernel_hypothesis(t_exp, g_exp, hg_exp, alpha, k, ho_mult):
+    h_g = 2 ** hg_exp
+    if h_g < alpha:
+        h_g = alpha
+    h_in = h_g * (2 ** g_exp)
+    h_out = 64 * ho_mult
+    T = 2 ** t_exp
+    p = _pack(h_in, h_out, h_g, alpha, k, seed=t_exp + hg_exp)
+    x = jax.random.normal(jax.random.PRNGKey(5), (T, h_in))
+    np.testing.assert_allclose(np.asarray(ops.delta_spmm(x, p, interpret=True)),
+                               np.asarray(ref.delta_spmm_ref(x, p)),
+                               atol=1e-3, rtol=1e-3)

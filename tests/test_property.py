@@ -1,0 +1,92 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    DeltaDQSpec,
+    compression_ratio,
+    groupwise_dropout_pack,
+    reconstruct_dense,
+)
+from repro.core.pack import to_storage_parts
+
+
+@settings(max_examples=20, deadline=None)
+@given(alpha=st.sampled_from([2, 4, 8, 16]),
+       k=st.sampled_from([2, 4, 8]),
+       m_exp=st.integers(0, 3))
+def test_ratio_monotonic_in_m(alpha, k, m_exp):
+    m = 2 ** m_exp
+    if m > 2 ** k - 1:
+        return
+    r0 = compression_ratio(alpha, k, 1)
+    r1 = compression_ratio(alpha, k, m)
+    assert r1 >= r0
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 100), k=st.sampled_from([2, 4, 8]))
+def test_quant_error_decreases_with_k(seed, k):
+    rng = jax.random.PRNGKey(seed)
+    d = jax.random.normal(rng, (64, 16)) * 0.01
+    errs = []
+    for kb in (2, 4, 8):
+        p = groupwise_dropout_pack(rng, d, h_g=16, alpha=2, k_bits=kb)
+        p_ref = groupwise_dropout_pack(rng, d, h_g=16, alpha=2, k_bits=None)
+        errs.append(float(jnp.linalg.norm(reconstruct_dense(p) - reconstruct_dense(p_ref))))
+    assert errs[0] >= errs[1] >= errs[2]
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 50),
+       alpha=st.sampled_from([2, 4, 8]),
+       hg_exp=st.integers(3, 6))
+def test_structured_sparsity_invariant(seed, alpha, hg_exp):
+    """Every (group, column) has exactly h_g/alpha survivors; support of m
+    parts partitions the nonzeros; dequantized zeros stay exactly zero."""
+    h_g = 2 ** hg_exp
+    if h_g < alpha:
+        return
+    rng = jax.random.PRNGKey(seed)
+    d = jax.random.normal(rng, (h_g * 2, 8)) * 0.01
+    p = groupwise_dropout_pack(rng, d, h_g=h_g, alpha=alpha, k_bits=4, m=4)
+    dense = np.asarray(reconstruct_dense(p))
+    keep = h_g // alpha
+    # indices are unique within each (group, column)
+    idx = np.asarray(p.idx)
+    for g in range(idx.shape[0]):
+        for o in range(idx.shape[2]):
+            assert len(np.unique(idx[g, :, o])) == keep
+    parts = to_storage_parts(p)
+    assert sum(len(q.low_codes) for q in parts) == p.nnz
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 30))
+def test_separate_computation_linearity(seed):
+    """forward(base + delta) == forward(base) + delta_matmul(x) at a single
+    linear layer for any packed delta (the separate-computation identity)."""
+    from repro.core.apply import apply_linear
+    rng = jax.random.PRNGKey(seed)
+    w = jax.random.normal(rng, (64, 32)) * 0.1
+    d = jax.random.normal(jax.random.fold_in(rng, 1), (64, 32)) * 0.01
+    p = groupwise_dropout_pack(rng, d, h_g=16, alpha=2, k_bits=None)
+    x = jax.random.normal(jax.random.fold_in(rng, 2), (4, 64))
+    y_sep = apply_linear(x, w, p)
+    y_merged = x @ (w + reconstruct_dense(p))
+    np.testing.assert_allclose(np.asarray(y_sep), np.asarray(y_merged), atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(1, 3), s=st.sampled_from([8, 16]), seed=st.integers(0, 20))
+def test_model_logits_finite_property(b, s, seed):
+    from repro.configs import get_smoke_config
+    from repro.models import lm
+    cfg = get_smoke_config("llama3.2-1b")
+    params = lm.init_params(cfg, jax.random.PRNGKey(seed))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(seed + 1), (b, s), 0, cfg.vocab)}
+    logits = lm.forward(cfg, params, batch)
+    assert logits.shape == (b, s, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))

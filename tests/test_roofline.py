@@ -1,0 +1,50 @@
+import pytest
+
+from repro.roofline import analysis as rl
+
+HLO = """
+ENTRY %main {
+  %p0 = bf16[128,1024]{1,0} parameter(0)
+  %ag = bf16[128,16384]{1,0} all-gather(%p0), replica_groups={{0,1}}, dimensions={1}
+  %ar = f32[256]{0} all-reduce(%x), to_apply=%add
+  %ars = f32[1024,8]{1,0} all-reduce-start(%y), to_apply=%add
+  %ard = f32[1024,8]{1,0} all-reduce-done(%ars)
+  %rs = f32[64]{0} reduce-scatter(%z), dimensions={0}
+  %a2a = bf16[32,32]{1,0} all-to-all(%w), dimensions={0}
+  %cp = u8[1000]{0} collective-permute(%v), source_target_pairs={{0,1}}
+  %dot = f32[128,128]{1,0} dot(%a, %b)
+}
+"""
+
+
+def test_collective_parser():
+    out = rl.collective_bytes(HLO)
+    b = out["bytes"]
+    assert b["all-gather"] == 128 * 16384 * 2
+    # all-reduce + all-reduce-start counted once each; -done skipped
+    assert b["all-reduce"] == 256 * 4 + 1024 * 8 * 4
+    assert b["reduce-scatter"] == 64 * 4
+    assert b["all-to-all"] == 32 * 32 * 2
+    assert b["collective-permute"] == 1000
+    assert out["counts"]["all-reduce"] == 2
+
+
+def test_roofline_terms_and_bottleneck():
+    r = rl.Roofline(flops=197e12, bytes_accessed=819e9 / 2, coll_bytes=0,
+                    model_flops=98.5e12)
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(0.5)
+    assert r.bottleneck == "compute"
+    assert r.useful_flops_frac == pytest.approx(0.5)
+    assert r.roofline_frac == pytest.approx(0.5)
+
+    r2 = rl.Roofline(flops=1e12, bytes_accessed=819e9, coll_bytes=100e9,
+                     model_flops=1e12)
+    assert r2.bottleneck == "collective"
+    assert r2.t_collective == pytest.approx(2.0)
+
+
+def test_model_flops_convention():
+    # train: 6ND, inference: 2ND (active params for MoE)
+    assert rl.model_flops_for("train", 10, 10, 100, 1) == 6000
+    assert rl.model_flops_for("decode", 10, 4, 100, 2) == 400
