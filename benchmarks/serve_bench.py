@@ -1,11 +1,20 @@
-"""Serving micro-benchmarks (CPU wall-clock; TPU numbers come from the
-dry-run roofline, not from this container).
+"""Serving benchmarks (CPU wall-clock; TPU numbers come from the dry-run
+roofline, not from this container).
 
-Measures: decode step latency base vs base+delta (separate computation
-overhead), multi-tenant memory footprint vs N full fine-tuned models.
+Measures, on the smoke config:
+
+* decode step latency, base vs base+delta (separate-computation overhead),
+* continuous-batching throughput / TTFT / occupancy for 1, 4 and 16
+  tenants under a staggered mixed request stream,
+* multi-tenant memory footprint vs N full fine-tuned models,
+
+and writes ``BENCH_serve.json`` at the repo root so later PRs have a perf
+trajectory to beat.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -13,10 +22,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_row, get_models
+from repro.configs import get_smoke_config
 from repro.core import DeltaDQSpec, compress
+from repro.launch.serve import synth_tenants
 from repro.models import lm
-from repro.serve import Engine
+from repro.serve import ContinuousEngine
 from repro.utils import tree_bytes
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SERVE_SPEC = DeltaDQSpec(alpha=8.0, k_bits=4, m=8, h_g=16)   # 128x class
 
 
 def _time(fn, *args, n=20):
@@ -28,7 +42,8 @@ def _time(fn, *args, n=20):
     return (time.perf_counter() - t0) / n * 1e6
 
 
-def main():
+def decode_overhead():
+    """Static decode-step microbenchmark on the trained bench models."""
     cfg, base, ft = get_models()
     deltas, report = compress(base, ft, DeltaDQSpec(alpha=8, k_bits=4, m=8, h_g=64))
     print("#", report.summary())
@@ -43,17 +58,85 @@ def main():
     us_delta = _time(dec_delta, cache, tok)
     print(f"decode_base_us,{us_base:.1f}")
     print(f"decode_with_delta_us,{us_delta:.1f}")
+    return {"decode_base_us": us_base, "decode_with_delta_us": us_delta,
+            "delta_overhead_x": us_delta / us_base}
 
-    base_bytes = tree_bytes(base)
-    delta_bytes = report.packed_total_bits / 8
-    n_tenants = 16
-    full_bytes = base_bytes * (1 + n_tenants)
-    ours_bytes = base_bytes + delta_bytes * n_tenants
-    print(f"memory_16_tenants: full={full_bytes / 1e6:.1f}MB "
-          f"deltadq={ours_bytes / 1e6:.1f}MB saving={full_bytes / ours_bytes:.1f}x")
 
-    csv_row("serve_bench", us_delta,
-            f"delta_overhead={us_delta / us_base:.2f}x;mem_saving_16t={full_bytes / ours_bytes:.1f}x")
+def continuous_bench(n_tenants: int, n_requests: int = 16, max_new: int = 8,
+                     n_slots: int = 4, arrival_gap: float = 0.02) -> dict:
+    """Mixed staggered stream through the continuous engine (smoke config)."""
+    cfg = get_smoke_config("llama3.2-1b")
+    rng = jax.random.PRNGKey(0)
+    base = lm.init_params(cfg, rng)
+    eng = ContinuousEngine(cfg, base, n_slots=n_slots, max_seq=64)
+    for name, deltas, _ in synth_tenants(cfg, base, n_tenants, SERVE_SPEC, rng):
+        eng.register_tenant(name, deltas)
+
+    # warm every jit shape (both buckets + decode) so the measurement is
+    # steady-state serving, not compilation
+    warm = [eng.submit("tenant0", np.zeros(L, np.int32), max_new_tokens=2)
+            for L in (4, 12)]
+    eng.run()
+    assert all(w.done for w in warm)
+    eng.reset_metrics()             # drop warmup counters, keep compiled fns
+
+    reqs = []
+    for i in range(n_requests):
+        L = 4 + (i % 3) * 4
+        prompt = np.asarray(jax.random.randint(
+            jax.random.fold_in(rng, 100 + i), (L,), 0, cfg.vocab))
+        reqs.append(eng.submit(f"tenant{i % n_tenants}", prompt,
+                               max_new_tokens=max_new,
+                               arrival=i * arrival_gap))
+    metrics = eng.run()
+    assert all(r.done for r in reqs)
+    rep = metrics.report()
+    out = {
+        "n_tenants": n_tenants,
+        "n_requests": n_requests,
+        "n_slots": n_slots,
+        "arrival_gap_s": arrival_gap,
+        "tokens_per_sec": rep["tokens_per_sec"],
+        "ttft_p50_ms": 1e3 * rep["ttft_p50"] if rep["ttft_p50"] is not None else None,
+        "batch_occupancy": rep["batch_occupancy"],
+        "prefill_shapes": sorted(eng.prefill_shapes),
+        "delta_bytes_per_tenant": eng.store.total_bytes() / n_tenants,
+        "base_bytes": tree_bytes(base),
+        "tenants": rep["tenants"],     # per-tenant throughput/TTFT/latency
+    }
+    print(f"serve_{n_tenants}t: {out['tokens_per_sec']:.0f} tok/s, "
+          f"ttft p50 {out['ttft_p50_ms']:.1f}ms, "
+          f"occupancy {out['batch_occupancy']:.2f}")
+    return out
+
+
+def main():
+    report = {"micro": decode_overhead(), "continuous": []}
+    for n_tenants in (1, 4, 16):
+        report["continuous"].append(continuous_bench(n_tenants))
+
+    base_bytes = report["continuous"][0]["base_bytes"]
+    delta_bytes = report["continuous"][0]["delta_bytes_per_tenant"]
+    n = 16
+    full = base_bytes * n
+    ours = base_bytes + delta_bytes * n
+    report["memory_16_tenants"] = {
+        "full_models_mb": full / 1e6, "deltadq_mb": ours / 1e6,
+        "saving_x": full / ours,
+    }
+    print(f"memory_16_tenants: full={full / 1e6:.1f}MB "
+          f"deltadq={ours / 1e6:.1f}MB saving={full / ours:.1f}x")
+
+    out_path = os.path.join(REPO, "BENCH_serve.json")
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"# wrote {out_path}")
+
+    us = report["micro"]["decode_with_delta_us"]
+    csv_row("serve_bench", us,
+            f"delta_overhead={report['micro']['delta_overhead_x']:.2f}x;"
+            f"mem_saving_16t={full / ours:.1f}x;"
+            f"tok_s_16t={report['continuous'][-1]['tokens_per_sec']:.0f}")
 
 
 if __name__ == "__main__":

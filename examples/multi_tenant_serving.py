@@ -1,22 +1,23 @@
-"""Multi-tenant serving demo: one base, many fine-tunes, mixed request batch.
+"""Multi-tenant serving demo: one base, many fine-tunes, mixed live stream.
 
 Simulates the paper's deployment (Fig. 2): N tenants fine-tuned for
-different "skills" register 128x-compressed deltas with one engine; a mixed
-request stream is served with per-tenant grouping (separate computation).
+different "skills" register 128x-compressed deltas with one
+continuous-batching engine; a staggered mixed request stream is served
+with slot-level scheduling — one decode step advances sequences belonging
+to *different* tenants, each corrected by its own packed delta.
 
     PYTHONPATH=src python examples/multi_tenant_serving.py --tenants 4
 """
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config
-from repro.core import DeltaDQSpec, compress
+from repro.core import DeltaDQSpec
+from repro.launch.serve import synth_tenants
 from repro.models import lm
-from repro.serve import Engine
+from repro.serve import ContinuousEngine, Engine
 from repro.utils import tree_bytes
 
 
@@ -24,51 +25,61 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--tenants", type=int, default=4)
     ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
     args = ap.parse_args()
 
     cfg = get_smoke_config("llama3.2-1b")
     rng = jax.random.PRNGKey(0)
     base = lm.init_params(cfg, rng)
-    eng = Engine(cfg, base, max_seq=48)
+    eng = ContinuousEngine(cfg, base, n_slots=args.slots, max_seq=48)
 
     print(f"registering {args.tenants} tenants at 128x delta compression ...")
     spec = DeltaDQSpec(alpha=8.0, k_bits=4, m=8, h_g=16)
-    for t in range(args.tenants):
-        ft = jax.tree.map(
-            lambda p, t=t: p + 0.02 * jax.random.normal(
-                jax.random.fold_in(rng, 100 + t), p.shape, jnp.float32).astype(p.dtype)
-            if p.ndim >= 2 else p, base)
-        deltas, report = compress(base, ft, spec)
-        eng.register_tenant(f"tenant{t}", deltas, report)
-        print(f"  tenant{t}: {report.summary()}")
+    for name, deltas, report in synth_tenants(cfg, base, args.tenants, spec, rng):
+        eng.register_tenant(name, deltas, report)
+        print(f"  {name}: {report.summary()}")
 
-    # mixed request stream
+    # staggered mixed request stream with token streaming on request 0
+    def stream(req, tok, done):
+        print(f"  [stream r{req.rid}] token {tok}{' <done>' if done else ''}")
+
     reqs = []
     for i in range(args.requests):
         tenant = f"tenant{i % args.tenants}"
-        prompt = np.asarray(jax.random.randint(jax.random.fold_in(rng, i), (8,), 0, cfg.vocab))
-        reqs.append((tenant, prompt))
+        prompt = np.asarray(jax.random.randint(
+            jax.random.fold_in(rng, i), (8,), 0, cfg.vocab))
+        reqs.append(eng.submit(tenant, prompt, max_new_tokens=8,
+                               arrival=0.01 * i,
+                               on_token=stream if i == 0 else None))
 
-    t0 = time.time()
-    outs = eng.serve_batch(reqs, max_new_tokens=8)
-    dt = time.time() - t0
-    print(f"served {len(reqs)} requests across {args.tenants} tenants "
-          f"in {dt:.1f}s (CPU, incl. jit)")
+    metrics = eng.run()
+    rep = metrics.report()
+    print(f"served {len(reqs)} requests across {args.tenants} tenants in "
+          f"{rep['wall_time_s']:.1f}s (CPU, incl. jit): "
+          f"{rep['tokens_per_sec']:.0f} tok/s, "
+          f"occupancy {rep['batch_occupancy']:.2f}, "
+          f"{rep['decode_steps']} decode steps for {rep['prefills']} prefills")
+    for name, t in rep["tenants"].items():
+        print(f"  {name}: {t['requests']} reqs, ttft p50 "
+              f"{1e3 * t['ttft_p50']:.0f}ms, latency p95 "
+              f"{1e3 * t['latency_p95']:.0f}ms")
 
     # different tenants produce different generations for the same prompt
-    same_prompt = reqs[0][1]
-    gens = {t: eng.generate(f"tenant{t}", same_prompt[None], max_new_tokens=8)[0]
+    ref = Engine(cfg, base, max_seq=48)
+    ref.store = eng.store
+    same_prompt = reqs[0].prompt
+    gens = {t: ref.generate(f"tenant{t}", same_prompt[None], max_new_tokens=8)[0]
             for t in range(min(args.tenants, 3))}
     uniq = {tuple(g.tolist()) for g in gens.values()}
     print(f"distinct generations for one prompt across tenants: {len(uniq)}/{len(gens)}")
 
-    rep = eng.memory_report()
-    n = rep["n_tenants"]
-    print(f"memory ledger: base {rep['base_bytes'] / 1e6:.1f}MB + "
-          f"{n} deltas {rep['delta_bytes_total'] / 1e6:.2f}MB  "
-          f"vs naive {n + 1} full models "
-          f"{rep['base_bytes'] * (n + 1) / 1e6:.1f}MB  "
-          f"=> {(rep['base_bytes'] * (n + 1)) / (rep['base_bytes'] + rep['delta_bytes_total']):.1f}x saving")
+    base_bytes = tree_bytes(base)
+    delta_bytes = eng.store.total_bytes()
+    n = args.tenants
+    print(f"memory ledger: base {base_bytes / 1e6:.1f}MB + "
+          f"{n} deltas {delta_bytes / 1e6:.2f}MB  "
+          f"vs naive {n} full models {base_bytes * n / 1e6:.1f}MB  "
+          f"=> {(base_bytes * n) / (base_bytes + delta_bytes):.1f}x saving")
 
 
 if __name__ == "__main__":

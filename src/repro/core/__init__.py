@@ -1,5 +1,6 @@
 """DeltaDQ core: the paper's contribution as composable JAX modules."""
 from repro.core.apply import (
+    SlotDelta,
     apply_linear,
     apply_linear_batched,
     delta_matmul,
@@ -8,6 +9,10 @@ from repro.core.apply import (
     merge_delta,
     none_like,
     set_use_pallas,
+    slot_delta_matmul,
+    stack_tenant_deltas,
+    wrap_slot_deltas,
+    zero_delta_like,
 )
 from repro.core.compress import (
     CompressionReport,

@@ -9,9 +9,17 @@ On TPU hot paths the correction term is the Pallas ``delta_spmm`` kernel
 mathematically identical XLA fallback below is used (config
 ``use_pallas_kernels``). Both share the pure-jnp oracle in
 ``repro/kernels/ref.py`` for tests.
+
+Multi-tenant slot dispatch: the continuous-batching engine serves one
+decode step whose batch rows belong to *different* tenants. For that it
+stacks every tenant's :class:`PackedDelta` along a new leading axis
+(:func:`stack_tenant_deltas`) and wraps each leaf in a :class:`SlotDelta`
+carrying the per-row tenant index, so ``apply_linear`` gathers each row's
+delta before applying the correction.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from typing import Any, Optional
 
 import jax
@@ -29,8 +37,65 @@ def set_use_pallas(flag: bool) -> None:
     _USE_PALLAS = flag
 
 
-def delta_matmul(x: jnp.ndarray, d: PackedDelta) -> jnp.ndarray:
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class SlotDelta:
+    """A tenant-stacked :class:`PackedDelta` plus per-batch-row tenant ids.
+
+    ``delta`` arrays carry a leading tenant axis T (then, optionally, the
+    per-kind layer stack): idx/codes [T, *lead, G, K, O], scale/zero
+    [T, *lead]. ``slots`` is int32 [B] mapping each batch row to a tenant
+    row; row 0 is conventionally the zero delta (base model).
+    """
+    delta: PackedDelta
+    slots: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.delta, self.slots), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def index(self, i) -> "SlotDelta":
+        """Slice the *layer* stack (axis 1, after the tenant axis)."""
+        d = self.delta
+        return SlotDelta(PackedDelta(
+            d.idx[:, i], d.codes[:, i],
+            d.scale[:, i] if jnp.ndim(d.scale) >= 2 else d.scale,
+            d.zero[:, i] if jnp.ndim(d.zero) >= 2 else d.zero,
+            d.h_in, d.h_out, d.h_g, d.keep, d.alpha, d.k_bits, d.m),
+            self.slots)
+
+    def gather(self) -> PackedDelta:
+        """Per-row delta: [B, G, K, O] gathered from the tenant stack."""
+        d = self.delta
+        s = self.slots
+        return PackedDelta(
+            d.idx[s], d.codes[s],
+            jnp.asarray(d.scale, jnp.float32)[s],
+            jnp.asarray(d.zero, jnp.int32)[s],
+            d.h_in, d.h_out, d.h_g, d.keep, d.alpha, d.k_bits, d.m)
+
+
+def slot_delta_matmul(x: jnp.ndarray, sd: SlotDelta) -> jnp.ndarray:
+    """Per-row correction: x [B, S, h_in] with row b using tenant slots[b].
+
+    Gathers each row's packed delta (tiny vs dense) then contracts; on TPU
+    hot paths the gathered stack routes through the vmapped Pallas kernel.
+    """
+    g = sd.gather()
+    if _USE_PALLAS:
+        from repro.kernels import ops
+        return ops.delta_spmm_slots(x, g)
+    dense = reconstruct_dense(g, dtype=x.dtype)      # [B, h_in, h_out]
+    return jnp.einsum("b...d,bdf->b...f", x, dense)
+
+
+def delta_matmul(x: jnp.ndarray, d) -> jnp.ndarray:
     """x [..., h_in] @ dequant(delta) [h_in, h_out] -> [..., h_out]."""
+    if isinstance(d, SlotDelta):
+        return slot_delta_matmul(x, d)
     if _USE_PALLAS and not d.stack_shape():
         from repro.kernels import ops
         return ops.delta_spmm(x, d)
@@ -49,6 +114,12 @@ def apply_linear(x: jnp.ndarray, w: jnp.ndarray, d: Optional[PackedDelta] = None
 def apply_linear_batched(x: jnp.ndarray, w: jnp.ndarray, d: Optional[PackedDelta] = None) -> jnp.ndarray:
     """Batched over a leading stack dim (e.g. MoE experts):
     x [E, ..., h_in], w [E, h_in, h_out], delta stacked [E, ...]."""
+    if isinstance(d, SlotDelta):
+        # Expert buffers mix tokens from many slots; a per-row gather has no
+        # meaning here. The serving engine must group such archs per tenant.
+        raise NotImplementedError(
+            "slot-dispatched deltas are not supported at expert-batched "
+            "linear sites (MoE); serve these tenants via per-tenant grouping")
     y = jnp.einsum("e...d,edf->e...f", x, w)
     if d is not None:
         dense = reconstruct_dense(d, dtype=x.dtype)  # [E, h_in, h_out]
@@ -81,11 +152,75 @@ def dindex(deltas: Any, i) -> Any:
     """Slice every PackedDelta in a deltas subtree at stacked-layer index i."""
     if deltas is None:
         return None
+    if isinstance(deltas, SlotDelta):
+        return deltas.index(i)
     if isinstance(deltas, PackedDelta):
         return deltas.index(i)
     if isinstance(deltas, dict):
         return {k: dindex(v, i) for k, v in deltas.items()}
     return None
+
+
+# ---------------------------------------------------------------------------
+# Tenant stacking for the continuous-batching engine
+# ---------------------------------------------------------------------------
+def _is_pd(x) -> bool:
+    return isinstance(x, PackedDelta)
+
+
+def zero_delta_like(deltas: Any) -> Any:
+    """An all-zero deltas tree with the same packed structure/shapes.
+
+    Dequantizes to exactly 0 at every leaf (scale 0, codes 0), so the base
+    model can occupy a row of a tenant stack without a structure change.
+    """
+    def z(d: PackedDelta) -> PackedDelta:
+        return PackedDelta(
+            jnp.zeros_like(d.idx), jnp.zeros_like(d.codes),
+            jnp.zeros(jnp.shape(d.scale), jnp.float32),
+            jnp.zeros(jnp.shape(d.zero), jnp.int32),
+            d.h_in, d.h_out, d.h_g, d.keep, d.alpha, d.k_bits, d.m)
+
+    return jax.tree.map(z, deltas, is_leaf=_is_pd)
+
+
+def stack_tenant_deltas(trees: list) -> Any:
+    """Stack N structurally identical delta trees along a new tenant axis.
+
+    Every leaf becomes a PackedDelta with arrays [T, ...]; scale/zero
+    become [T, *lead]. Raises ValueError when the trees disagree in
+    structure or packing meta (different specs cannot share one stack).
+    """
+    if not trees:
+        raise ValueError("need at least one delta tree to stack")
+    ref = jax.tree.structure(trees[0], is_leaf=_is_pd)
+    for t in trees[1:]:
+        if jax.tree.structure(t, is_leaf=_is_pd) != ref:
+            raise ValueError("tenant delta trees differ in structure; "
+                             "cannot stack for slot dispatch")
+
+    def stack(*leaves):
+        d0 = leaves[0]
+        for d in leaves[1:]:
+            if (d.h_in, d.h_out, d.h_g, d.keep, d.k_bits, d.m,
+                    d.idx.shape, d.codes.shape) != \
+               (d0.h_in, d0.h_out, d0.h_g, d0.keep, d0.k_bits, d0.m,
+                    d0.idx.shape, d0.codes.shape):
+                raise ValueError("tenant deltas use different packing specs; "
+                                 "cannot stack for slot dispatch")
+        return PackedDelta(
+            jnp.stack([d.idx for d in leaves]),
+            jnp.stack([d.codes for d in leaves]),
+            jnp.stack([jnp.asarray(d.scale, jnp.float32) for d in leaves]),
+            jnp.stack([jnp.asarray(d.zero, jnp.int32) for d in leaves]),
+            d0.h_in, d0.h_out, d0.h_g, d0.keep, d0.alpha, d0.k_bits, d0.m)
+
+    return jax.tree.map(stack, *trees, is_leaf=_is_pd)
+
+
+def wrap_slot_deltas(stacked: Any, slots: jnp.ndarray) -> Any:
+    """Attach per-row tenant ids to every leaf of a tenant-stacked tree."""
+    return jax.tree.map(lambda d: SlotDelta(d, slots), stacked, is_leaf=_is_pd)
 
 
 def merge_delta(params: Any, deltas: Any) -> Any:

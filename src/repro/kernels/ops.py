@@ -65,6 +65,28 @@ def delta_spmm(x: jnp.ndarray, d: PackedDelta, *, tb: int = 128, ob: int = 128,
     return y[:T].reshape(*lead, d.h_out)
 
 
+def delta_spmm_slots(x: jnp.ndarray, d: PackedDelta, *, tb: int = 128,
+                     ob: int = 128, interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Per-row delta matmul for mixed-tenant decode batches.
+
+    x [B, ..., h_in]; d is a row-gathered PackedDelta stacked [B, ...]
+    (one tenant's packed delta per batch row). Row b computes
+    ``x[b] @ dequant(d[b])``. On TPU the per-matrix kernel is vmapped over
+    the row axis; elsewhere (and in interpret mode, where the batching
+    rule is not exercised) the dense XLA fallback is used.
+    """
+    if interpret is None:
+        interpret = _INTERPRET
+    B = x.shape[0]
+    assert d.stack_shape() == (B,), (d.stack_shape(), x.shape)
+    probe = d.index(0)
+    if interpret or not kernel_supported(probe):
+        dense = reconstruct_dense(d, dtype=x.dtype)   # [B, h_in, h_out]
+        return jnp.einsum("b...d,bdf->b...f", x, dense)
+    fn = lambda xb, db: delta_spmm(xb, db, tb=tb, ob=ob, interpret=False)
+    return jax.vmap(fn)(x, d)
+
+
 def fused_base_delta(x: jnp.ndarray, w: jnp.ndarray, d: PackedDelta, *,
                      tb: int = 128, ob: int = 128,
                      interpret: Optional[bool] = None) -> jnp.ndarray:

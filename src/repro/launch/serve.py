@@ -1,14 +1,15 @@
 """Production serving launcher: base model + N DeltaDQ tenants.
 
 Loads (or synthesizes) fine-tuned variants, compresses their deltas at the
-requested ratio, and drives a mixed request stream through the engine —
-the deployment of paper Fig. 2 as a runnable process.
+requested ratio, and drives a mixed, staggered request stream through the
+continuous-batching engine — the deployment of paper Fig. 2 as a runnable
+process, now with slot-level scheduling and per-tenant metrics.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
-        --tenants 3 --ratio 128 --requests 12
+        --tenants 3 --ratio 128 --requests 12 --slots 8
 """
 import argparse
-import time
+import json
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +18,8 @@ import numpy as np
 from repro.configs import get_config, get_smoke_config
 from repro.core import DeltaDQSpec, compress
 from repro.models import lm
-from repro.serve import Engine
+from repro.serve import ContinuousEngine
+from repro.utils import tree_bytes
 
 RATIO_SPECS = {
     8: DeltaDQSpec(alpha=8.0, k_bits=None, h_g=16),
@@ -28,6 +30,18 @@ RATIO_SPECS = {
 }
 
 
+def synth_tenants(cfg, base, n, spec, rng):
+    """Synthesize n fine-tuned variants and compress their deltas."""
+    out = []
+    for t in range(n):
+        ft = jax.tree.map(
+            lambda p, t=t: p + 0.02 * jax.random.normal(
+                jax.random.fold_in(rng, 7 + t), p.shape, jnp.float32).astype(p.dtype)
+            if p.ndim >= 2 else p, base)
+        out.append((f"tenant{t}", *compress(base, ft, spec)))
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
@@ -36,34 +50,56 @@ def main():
     ap.add_argument("--ratio", type=int, default=128, choices=sorted(RATIO_SPECS))
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--arrival-gap", type=float, default=0.05,
+                    help="seconds between request arrivals (staggered stream)")
+    ap.add_argument("--json", action="store_true",
+                    help="print the metrics report as JSON")
     args = ap.parse_args()
 
     cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
     rng = jax.random.PRNGKey(0)
     base = lm.init_params(cfg, rng)
-    eng = Engine(cfg, base, max_seq=64)
+    eng = ContinuousEngine(cfg, base, n_slots=args.slots, max_seq=args.max_seq)
 
-    spec = RATIO_SPECS[args.ratio]
-    for t in range(args.tenants):
-        ft = jax.tree.map(
-            lambda p, t=t: p + 0.02 * jax.random.normal(
-                jax.random.fold_in(rng, 7 + t), p.shape, jnp.float32).astype(p.dtype)
-            if p.ndim >= 2 else p, base)
-        deltas, report = compress(base, ft, spec)
-        eng.register_tenant(f"tenant{t}", deltas, report)
-        print(f"registered tenant{t}: {report.summary()}", flush=True)
+    for name, deltas, report in synth_tenants(cfg, base, args.tenants,
+                                              RATIO_SPECS[args.ratio], rng):
+        eng.register_tenant(name, deltas, report)
+        print(f"registered {name}: {report.summary()}", flush=True)
 
-    reqs = [(f"tenant{i % args.tenants}",
-             np.asarray(jax.random.randint(jax.random.fold_in(rng, i), (8,), 0, cfg.vocab)))
-            for i in range(args.requests)]
-    t0 = time.time()
-    outs = eng.serve_batch(reqs, max_new_tokens=args.max_new)
-    print(f"served {len(outs)} requests in {time.time() - t0:.1f}s")
-    rep = eng.memory_report()
-    n = rep["n_tenants"]
-    print(f"memory: base {rep['base_bytes'] / 1e6:.1f}MB + deltas "
-          f"{rep['delta_bytes_total'] / 1e6:.2f}MB vs naive "
-          f"{rep['base_bytes'] * (n + 1) / 1e6:.1f}MB")
+    reqs = []
+    for i in range(args.requests):
+        tenant = f"tenant{i % args.tenants}"
+        L = 4 + (i % 3) * 4     # mixed prompt lengths -> multiple buckets
+        prompt = np.asarray(jax.random.randint(
+            jax.random.fold_in(rng, 100 + i), (L,), 0, cfg.vocab))
+        reqs.append(eng.submit(tenant, prompt, max_new_tokens=args.max_new,
+                               arrival=i * args.arrival_gap))
+
+    metrics = eng.run()
+    rep = metrics.report()
+    assert all(r.done for r in reqs)
+
+    if args.json:
+        print(json.dumps(rep, indent=2))
+    else:
+        print(f"served {len(reqs)} requests / {rep['total_tokens']} tokens in "
+              f"{rep['wall_time_s']:.2f}s "
+              f"({rep['tokens_per_sec']:.0f} tok/s, "
+              f"occupancy {rep['batch_occupancy']:.2f}, "
+              f"{len(eng.prefill_shapes)} prefill shapes)")
+        for name, t in rep["tenants"].items():
+            print(f"  {name}: {t['requests']} reqs, {t['tokens']} toks, "
+                  f"ttft p50 {1e3 * t['ttft_p50']:.0f}ms "
+                  f"latency p95 {1e3 * t['latency_p95']:.0f}ms")
+
+    store = eng.store
+    base_bytes = tree_bytes(base)
+    n = len(store.ordered())
+    print(f"memory: base {base_bytes / 1e6:.1f}MB + deltas "
+          f"{store.total_bytes() / 1e6:.2f}MB vs {n} full models "
+          f"{base_bytes * n / 1e6:.1f}MB")
 
 
 if __name__ == "__main__":

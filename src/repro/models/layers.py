@@ -54,9 +54,10 @@ def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
 def _attend(q, k, v, q_pos, k_pos, window, causal, cap):
     """One q-block of GQA attention.
 
-    q [B,Sq,Hq,D]; k,v [B,Sk,Hkv,D]; q_pos [Sq]; k_pos [Sk] (entries < 0 are
-    invalid ring-buffer slots); window: 0 = global, >0 = sliding window
-    (may be a traced scalar).
+    q [B,Sq,Hq,D]; k,v [B,Sk,Hkv,D]; q_pos [Sq] or [B,Sq]; k_pos [Sk] or
+    [B,Sk] (entries < 0 are invalid ring-buffer slots — 2-D forms carry
+    per-row positions for continuous-batching slots); window: 0 = global,
+    >0 = sliding window (may be a traced scalar).
     """
     B, Sq, Hq, D = q.shape
     Hkv = k.shape[2]
@@ -65,13 +66,15 @@ def _attend(q, k, v, q_pos, k_pos, window, causal, cap):
     scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
                         k.astype(jnp.float32)) * (D ** -0.5)
     scores = softcap(scores, cap)
-    valid = (k_pos >= 0)[None, :]
+    qp = q_pos if q_pos.ndim == 2 else q_pos[None]       # [B*, Sq]
+    kp = k_pos if k_pos.ndim == 2 else k_pos[None]       # [B*, Sk]
+    valid = (kp >= 0)[:, None, :]
     if causal:
-        valid = valid & (k_pos[None, :] <= q_pos[:, None])
+        valid = valid & (kp[:, None, :] <= qp[:, :, None])
     window = jnp.asarray(window)
-    in_window = jnp.where(window > 0, q_pos[:, None] - k_pos[None, :] < window, True)
-    valid = valid & in_window
-    scores = jnp.where(valid[None, None, None], scores, _NEG_INF)
+    in_window = jnp.where(window > 0, qp[:, :, None] - kp[:, None, :] < window, True)
+    valid = valid & in_window                             # [B*, Sq, Sk]
+    scores = jnp.where(valid[:, None, None], scores, _NEG_INF)
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
     return out.reshape(B, Sq, Hq, D).astype(q.dtype)
@@ -85,7 +88,10 @@ def attention(q, k, v, q_pos, k_pos, *, window=0, causal=True, cap=None,
         return _attend(q, k, v, q_pos, k_pos, window, causal, cap)
     nb = Sq // block_q
     qb = q.reshape(q.shape[0], nb, block_q, *q.shape[2:]).swapaxes(0, 1)
-    pb = q_pos.reshape(nb, block_q)
+    if q_pos.ndim == 2:
+        pb = q_pos.reshape(q_pos.shape[0], nb, block_q).swapaxes(0, 1)
+    else:
+        pb = q_pos.reshape(nb, block_q)
 
     def body(_, qp):
         qi, pi = qp

@@ -297,7 +297,12 @@ def _attn_block_train(cfg, p, d, x, positions, window):
 
 
 def _attn_block_prefill(cfg, p, d, x, positions, window, cache):
-    """Train-style attention + cache write of the last S_c tokens."""
+    """Train-style attention + cache write of the last S_c tokens.
+
+    ``positions`` is [S] (shared) or [B, S] (per-row, continuous batching:
+    left-padded prompts carry negative positions at pad slots, which the
+    cache marks invalid so they are never attended).
+    """
     u = rmsnorm(x, p["ln1"], cfg.norm_eps)
     q, k, v = qkv_project(u, p, d, cfg, positions)
     out = attention(q, k, v, positions, positions, window=window, causal=True,
@@ -305,27 +310,53 @@ def _attn_block_prefill(cfg, p, d, x, positions, window, cache):
     S = k.shape[1]
     S_c = cache["k"].shape[1]
     n_write = min(S, S_c)
-    pos_w = positions[-n_write:]
-    slots = pos_w % S_c
-    new_cache = dict(
-        k=cache["k"].at[:, slots].set(k[:, -n_write:].astype(cache["k"].dtype)),
-        v=cache["v"].at[:, slots].set(v[:, -n_write:].astype(cache["v"].dtype)),
-        pos=cache["pos"].at[slots].set(pos_w),
-    )
+    if positions.ndim == 1:
+        pos_w = positions[-n_write:]
+        slots = pos_w % S_c
+        new_cache = dict(
+            k=cache["k"].at[:, slots].set(k[:, -n_write:].astype(cache["k"].dtype)),
+            v=cache["v"].at[:, slots].set(v[:, -n_write:].astype(cache["v"].dtype)),
+            pos=cache["pos"].at[:, slots].set(pos_w[None]),
+        )
+    else:
+        B = x.shape[0]
+        pos_w = positions[:, -n_write:]                   # [B, n_write]
+        slots = pos_w % S_c
+        bi = jnp.arange(B)[:, None]
+        new_cache = dict(
+            k=cache["k"].at[bi, slots].set(k[:, -n_write:].astype(cache["k"].dtype)),
+            v=cache["v"].at[bi, slots].set(v[:, -n_write:].astype(cache["v"].dtype)),
+            pos=cache["pos"].at[bi, slots].set(pos_w),
+        )
     out = apply_linear(out.reshape(*x.shape[:-1], cfg.q_dim), p["wo"], dget(d, "wo"))
     return x + out, new_cache
 
 
 def _attn_block_decode(cfg, p, d, x, pos, window, cache):
-    """Single-token attention over the (ring-buffer) cache."""
-    positions = pos[None] if jnp.ndim(pos) == 0 else pos
+    """Single-token attention over the (ring-buffer) cache.
+
+    ``pos`` scalar: all rows decode at the same position (static batch).
+    ``pos`` [B]: per-slot positions (continuous batching) — each row
+    writes its own ring slot.
+    """
     u = rmsnorm(x, p["ln1"], cfg.norm_eps)
-    q, k, v = qkv_project(u, p, d, cfg, positions)
     S_c = cache["k"].shape[1]
-    slot = pos % S_c
-    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
-    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
-    cp = jax.lax.dynamic_update_slice_in_dim(cache["pos"], positions.astype(jnp.int32), slot, axis=0)
+    if jnp.ndim(pos) == 1:
+        B = x.shape[0]
+        positions = pos[:, None]                          # [B, 1]
+        q, k, v = qkv_project(u, p, d, cfg, positions)
+        slot = pos % S_c                                  # [B]
+        bi = jnp.arange(B)
+        ck = cache["k"].at[bi, slot].set(k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[bi, slot].set(v[:, 0].astype(cache["v"].dtype))
+        cp = cache["pos"].at[bi, slot].set(pos)
+    else:
+        positions = pos[None] if jnp.ndim(pos) == 0 else pos
+        q, k, v = qkv_project(u, p, d, cfg, positions)
+        slot = pos % S_c
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+        cp = cache["pos"].at[:, slot].set(positions[0])
     out = attention(q, ck, cv, positions, cp, window=window, causal=True,
                     cap=cfg.attn_softcap)
     out = apply_linear(out.reshape(*x.shape[:-1], cfg.q_dim), p["wo"], dget(d, "wo"))
@@ -618,7 +649,9 @@ def cache_specs(cfg: ArchConfig, batch: int, max_seq: int, enc_len: int = 0):
         return {
             "k": jax.ShapeDtypeStruct((batch, S_c, cfg.n_kv, cfg.head_dim), dtype),
             "v": jax.ShapeDtypeStruct((batch, S_c, cfg.n_kv, cfg.head_dim), dtype),
-            "pos": jax.ShapeDtypeStruct((S_c,), jnp.int32),
+            # per-row slot positions: rows advance independently under
+            # continuous batching (every cache leaf leads with batch)
+            "pos": jax.ShapeDtypeStruct((batch, S_c), jnp.int32),
         }
 
     out = []
@@ -673,10 +706,17 @@ def prefill(cfg: ArchConfig, params, batch: dict, cache, deltas=None):
     """Run the prompt through the model, filling caches.
 
     Returns (logits for the LAST position [B,V], cache).
+
+    ``batch["positions"]`` ([B, S] int32, optional) overrides the default
+    ``arange(S)``: the continuous-batching engine left-pads prompts to a
+    length bucket and passes negative positions at pad slots, so one jit
+    shape serves every prompt length in the bucket.
     """
     tokens = batch["tokens"]
     x = embed_tokens(cfg, params, tokens)
-    positions = jnp.arange(tokens.shape[1])
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.arange(tokens.shape[1])
     memory = None
     if cfg.family == "encdec":
         memory = encode(cfg, params, batch["enc_feats"], deltas)
@@ -689,12 +729,15 @@ def prefill(cfg: ArchConfig, params, batch: dict, cache, deltas=None):
 
 
 def decode_step(cfg: ArchConfig, params, cache, tokens, pos, deltas=None):
-    """One decode step. tokens [B,1] int32; pos scalar int32.
+    """One decode step. tokens [B,1] int32; pos scalar int32 (all rows at
+    the same position) or [B] int32 (per-slot positions, continuous
+    batching — ``deltas`` may then be a slot-dispatched tree).
 
     Returns (logits [B,V], new cache).
     """
     x = embed_tokens(cfg, params, tokens)
-    positions = jnp.full((1,), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = pos[:, None] if pos.ndim == 1 else jnp.full((1,), pos, jnp.int32)
     h, new_caches = _walk(cfg, params, x, positions, deltas=deltas, caches=cache,
                           memory=None, decode_pos=pos)
     logits = unembed(cfg, params, h, deltas)

@@ -82,4 +82,7 @@ def rglru_block(x, p, d, cfg: ArchConfig, state: Optional[RecState] = None,
 
     out = (h * yb).astype(x.dtype)
     out = apply_linear(out, p["linear_out"], dget(d, "linear_out"))
-    return out, RecState(new_conv, h_last.astype(jnp.float32))
+    # conv ring lives in the cache-spec dtype (prefill activations may be
+    # f32): serving slots must be bit-identical however the row was filled
+    return out, RecState(new_conv.astype(jnp.dtype(cfg.param_dtype)),
+                         h_last.astype(jnp.float32))

@@ -160,4 +160,7 @@ def mamba_block(x, p, d, cfg: ArchConfig, state: Optional[SsmState] = None,
     y = y.reshape(B_, S, d_inner).astype(x.dtype)
     y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), p["out_norm"], cfg.norm_eps)
     out = apply_linear(y, p["wout"], dget(d, "wout"))
-    return out, SsmState(new_conv_x, new_conv_bc, new_state)
+    # conv rings live in the cache-spec dtype (prefill activations may be
+    # f32): serving slots must be bit-identical however the row was filled
+    cdt = jnp.dtype(cfg.param_dtype)
+    return out, SsmState(new_conv_x.astype(cdt), new_conv_bc.astype(cdt), new_state)

@@ -1,3 +1,34 @@
-from repro.serve.engine import DeltaStore, Engine, Tenant
+from repro.serve.engine import (
+    ContinuousEngine,
+    DeltaStore,
+    Engine,
+    Tenant,
+    mask_after_stop,
+)
+from repro.serve.kv import SlotKVCache
+from repro.serve.metrics import Metrics, TenantStats
+from repro.serve.scheduler import (
+    LengthBuckets,
+    Request,
+    RequestQueue,
+    Scheduler,
+    SlotState,
+    VirtualClock,
+)
 
-__all__ = ["DeltaStore", "Engine", "Tenant"]
+__all__ = [
+    "ContinuousEngine",
+    "DeltaStore",
+    "Engine",
+    "LengthBuckets",
+    "Metrics",
+    "Request",
+    "RequestQueue",
+    "Scheduler",
+    "SlotKVCache",
+    "SlotState",
+    "Tenant",
+    "TenantStats",
+    "VirtualClock",
+    "mask_after_stop",
+]

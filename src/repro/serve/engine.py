@@ -1,29 +1,70 @@
-"""Multi-tenant serving engine — the paper's deployment scheme (Fig. 2/3).
+"""Multi-tenant serving engines — the paper's deployment scheme (Fig. 2/3).
 
 One **base model** is resident; each *tenant* (fine-tuned model) registers
-only its DeltaDQ-compressed delta. Requests are grouped per tenant and each
-group runs the separate-computation path: base matmuls shared, plus the
-tenant's packed-delta correction at every linear site. This is exactly the
-paper's deployment: memory = base + sum(tiny deltas) instead of N full
-fine-tuned models.
+only its DeltaDQ-compressed delta. Two engines share that model:
 
-The engine is deliberately simple (static batch per tenant, greedy
-sampling); the launch-level ``serve.py`` driver adds request queues. Both
-prefill and decode are jit'd once per (tenant-group batch shape).
+* :class:`ContinuousEngine` — the production path. A continuous-batching
+  scheduler packs requests from *mixed tenants* into fixed decode slots
+  (``serve.scheduler``), a slot-based paged KV cache admits/evicts
+  sequences mid-flight (``serve.kv``), and every decode step serves all
+  occupied slots at once: a per-slot tenant-id gather over the
+  tenant-stacked packed deltas (``core.apply.SlotDelta``) applies each
+  row's correction inside one jitted step. Prompt lengths are bucketed
+  and left-padded so jit compiles at most once per bucket.
+
+* :class:`Engine` — the original static per-tenant-batch engine, kept as
+  the reference path (``generate``) and as a thin compatibility shim:
+  ``serve_batch`` now routes through a ContinuousEngine and falls back to
+  the legacy per-tenant grouping only where slot dispatch cannot apply
+  (heterogeneous compression specs, MoE expert-site deltas, encdec/vlm
+  inputs).
+
+Memory stays the paper's point: base + sum(tiny deltas) instead of N
+full fine-tuned models.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+import time
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.arch import ArchConfig
+from repro.core.apply import (
+    dget,
+    stack_tenant_deltas,
+    wrap_slot_deltas,
+    zero_delta_like,
+)
 from repro.core.compress import CompressionReport
+from repro.core.pack import PackedDelta
 from repro.models import lm
+from repro.serve.kv import SlotKVCache
+from repro.serve.metrics import Metrics
+from repro.serve.scheduler import (
+    LengthBuckets,
+    Request,
+    RequestQueue,
+    Scheduler,
+    SlotState,
+)
 from repro.utils import tree_bytes
+
+
+def mask_after_stop(gen: np.ndarray, stop_token: int) -> np.ndarray:
+    """Replace every token *after* the first stop token with the stop token.
+
+    ``gen`` [B, T] int. Explicit zero-filled shift: a stop token in the
+    final step must not wrap around and corrupt column 0 (the old
+    ``np.roll`` implementation did exactly that).
+    """
+    stopped = np.cumsum(gen == stop_token, axis=1) > 0
+    after = np.zeros_like(stopped)
+    after[:, 1:] = stopped[:, :-1]
+    return np.where(after, stop_token, gen)
 
 
 @dataclasses.dataclass
@@ -37,15 +78,28 @@ class Tenant:
 
 
 class DeltaStore:
-    """Registry of compressed per-tenant deltas."""
+    """Registry of compressed per-tenant deltas.
+
+    ``version`` bumps on every registration so engines can rebuild their
+    tenant-stacked dispatch trees lazily; registration order is stable, so
+    tenant row indices never shift under a live scheduler. ``unregister``
+    DOES shift rows — ContinuousEngine refuses to continue in-flight
+    sequences across it (drain first).
+    """
 
     def __init__(self):
         self._tenants: dict[str, Tenant] = {}
+        self.version = 0
 
     def register(self, name: str, deltas: Any, report=None) -> Tenant:
         t = Tenant(name, deltas, report)
         self._tenants[name] = t
+        self.version += 1
         return t
+
+    def unregister(self, name: str) -> None:
+        self._tenants.pop(name, None)
+        self.version += 1
 
     def get(self, name: str) -> Tenant:
         return self._tenants[name]
@@ -53,10 +107,280 @@ class DeltaStore:
     def names(self):
         return sorted(self._tenants)
 
+    def ordered(self) -> List[Tenant]:
+        """Tenants in registration order (stable stack rows)."""
+        return list(self._tenants.values())
+
     def total_bytes(self) -> int:
         return sum(t.bytes() for t in self._tenants.values())
 
 
+# ---------------------------------------------------------------------------
+# Continuous-batching engine
+# ---------------------------------------------------------------------------
+class ContinuousEngine:
+    """Async continuous-batching server over one base model + N deltas.
+
+    Usage::
+
+        eng = ContinuousEngine(cfg, base_params, n_slots=8, max_seq=256)
+        eng.register_tenant("math", deltas)
+        req = eng.submit("math", prompt, max_new_tokens=16,
+                         on_token=lambda r, tok, done: ...)
+        eng.run()                      # drains queue + slots
+        req.output()                   # np.ndarray of generated tokens
+
+    jit shape budget: one decode shape (fixed ``n_slots``), one prefill
+    shape per length bucket, one cache-insert shape. Mixed tenants share
+    all of them.
+    """
+
+    def __init__(self, cfg: ArchConfig, base_params: Any, *,
+                 n_slots: int = 8, max_seq: int = 256, min_bucket: int = 8,
+                 store: Optional[DeltaStore] = None, clock=time.monotonic):
+        if cfg.family in ("encdec", "vlm"):
+            raise ValueError(
+                f"continuous batching does not support family={cfg.family!r} "
+                "(per-request encoder inputs); use Engine.generate")
+        self.cfg = cfg
+        self.base = base_params
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.store = store if store is not None else DeltaStore()
+        # ssm/rec mixers carry sequence state, so left-padding would
+        # pollute it: bucket those archs by exact prompt length instead.
+        exact = any(k in ("ssm", "rec") for k in cfg.layer_kinds)
+        self.buckets = LengthBuckets(min_bucket=min_bucket,
+                                     max_bucket=max_seq, exact=exact)
+        self.queue = RequestQueue()
+        self.sched = Scheduler(n_slots, self.buckets)
+        self.kv = SlotKVCache(cfg, n_slots, max_seq)
+        self.metrics = Metrics(n_slots)
+        self.clock = clock
+
+        # host mirrors of per-slot decode state (row 0 = zero delta / base)
+        self._tok = np.zeros(n_slots, np.int32)
+        self._pos = np.zeros(n_slots, np.int32)
+        self._row = np.zeros(n_slots, np.int32)
+
+        self._stacked = None          # tenant-stacked deltas tree
+        self._zero_tree = None        # unstacked all-zero tree (base prefill)
+        self._rows: dict[str, int] = {}
+        self._store_version = -1
+        self._t0: Optional[float] = None
+
+        self._prefill = jax.jit(
+            lambda p, b, c, d: lm.prefill(cfg, p, b, c, deltas=d))
+
+        def _step(p, c, t, pos, d):
+            logits, c = lm.decode_step(cfg, p, c, t, pos, deltas=d)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), c
+
+        # donate the cache: the decode step updates the (dominant) KV
+        # allocation in place instead of copying it every token
+        self._decode = jax.jit(_step, donate_argnums=(1,))
+        self.prefill_shapes: set = set()
+
+    # -- tenants ------------------------------------------------------------
+    def register_tenant(self, name: str, deltas: Any, report=None) -> Tenant:
+        """Register a tenant, validating slot-dispatch compatibility NOW.
+
+        A tenant whose packing spec cannot join the stack must fail here,
+        not mid-run inside a prefill (which would leak the claimed slot).
+        """
+        t = self.store.register(name, deltas, report)
+        try:
+            self._refresh_stacked()
+        except ValueError:
+            self.store.unregister(name)
+            raise
+        return t
+
+    def _refresh_stacked(self) -> None:
+        if self._store_version == self.store.version:
+            return
+        tenants = self.store.ordered()
+        if not tenants:
+            self._stacked = None
+            self._zero_tree = None
+            self._rows = {}
+        else:
+            for t in tenants:
+                moe = dget(t.deltas, "moe")
+                if moe is not None and any(
+                        isinstance(dget(moe, k), PackedDelta)
+                        for k in ("wi", "wg", "wo")):
+                    raise ValueError(
+                        "slot dispatch cannot apply deltas at MoE expert "
+                        "sites; serve MoE tenants via per-tenant grouping")
+            self._zero_tree = zero_delta_like(tenants[0].deltas)
+            # row 0 = zero delta so base requests share the decode shape
+            self._stacked = stack_tenant_deltas(
+                [self._zero_tree] + [t.deltas for t in tenants])
+            self._rows = {t.name: i + 1 for i, t in enumerate(tenants)}
+        # registration is append-only so rows never shift — but a live
+        # unregister would remap rows under in-flight sequences, silently
+        # decoding them with another tenant's delta. Refuse instead.
+        for slot in self.sched.active_slots():
+            state = self.sched.slots[slot]
+            want = self._rows.get(state.request.tenant, 0) \
+                if state.request.tenant else 0
+            if want != state.tenant_row:
+                raise RuntimeError(
+                    f"tenant stack rows shifted under in-flight request "
+                    f"{state.request.rid} (tenant {state.request.tenant!r}); "
+                    "drain the engine before unregistering tenants")
+        self._store_version = self.store.version
+
+    # -- request API --------------------------------------------------------
+    def submit(self, tenant: Optional[str], prompt: np.ndarray, *,
+               max_new_tokens: int = 16, stop_token: Optional[int] = None,
+               arrival: float = 0.0, deadline: Optional[float] = None,
+               on_token=None) -> Request:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        self.buckets.bucket(len(prompt))   # raises if no bucket fits
+        # live positions are 0..L+new-1; left-pad slots carry invalid
+        # positions and may be overwritten, so they don't count against
+        # the ring capacity
+        if len(prompt) + max_new_tokens > self.max_seq:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new_tokens "
+                f"({max_new_tokens}) exceeds max_seq={self.max_seq}")
+        if tenant is not None:
+            self.store.get(tenant)   # KeyError early for unknown tenants
+        return self.queue.submit(tenant, prompt, max_new_tokens=max_new_tokens,
+                                 stop_token=stop_token, arrival=arrival,
+                                 deadline=deadline, on_token=on_token)
+
+    # -- scheduling core ----------------------------------------------------
+    def _now(self) -> float:
+        """Engine-relative time; the timebase of Request.arrival/deadline."""
+        if self._t0 is None:
+            self._t0 = self.clock()
+        return self.clock() - self._t0
+
+    def _prefill_into(self, slot: int, req: Request, now: float) -> None:
+        self._refresh_stacked()
+        L = req.prompt_len
+        bucket = self.buckets.bucket(L)
+        pad = bucket - L
+        tokens = np.zeros((1, bucket), np.int32)
+        tokens[0, pad:] = req.prompt
+        positions = (np.arange(bucket, dtype=np.int32) - pad)[None]
+        if req.tenant is not None:
+            deltas = self.store.get(req.tenant).deltas
+        else:
+            deltas = self._zero_tree    # None when no tenants registered
+        row_cache = lm.init_cache(self.cfg, 1, self.max_seq)
+        self.prefill_shapes.add(bucket)
+        logits, row_cache = self._prefill(
+            self.base, {"tokens": jnp.asarray(tokens),
+                        "positions": jnp.asarray(positions)},
+            row_cache, deltas)
+        self.kv.insert(slot, row_cache)
+
+        first = int(np.asarray(jnp.argmax(logits, axis=-1))[0])
+        t_first = self._now()
+        self.metrics.record_admit(req.tenant, now - req.arrival)
+        self.metrics.record_first_token(req.tenant, t_first - req.arrival)
+        self.metrics.record_token(req.tenant)
+        req.t_first_token = t_first
+        fin = req.emit(first)
+
+        self._tok[slot] = first
+        self._pos[slot] = L
+        self._row[slot] = self._rows.get(req.tenant, 0) if req.tenant else 0
+        self.sched.place(slot, SlotState(request=req, next_token=first,
+                                         pos=L, tenant_row=self._row[slot]))
+        if fin:
+            self._finish(slot, t_first)
+
+    def _finish(self, slot: int, now: float) -> None:
+        state = self.sched.slots[slot]
+        req = state.request
+        req.t_done = now
+        self.metrics.record_done(req.tenant, now - req.arrival)
+        self.sched.release(slot)
+        self.kv.release(slot)
+
+    def _decode_all(self, now: float) -> None:
+        active = self.sched.active_slots()
+        if not active:
+            return
+        self._refresh_stacked()
+        sd = None
+        if self._stacked is not None:
+            sd = wrap_slot_deltas(self._stacked, jnp.asarray(self._row))
+        nxt, new_cache = self._decode(
+            self.base, self.kv.cache, jnp.asarray(self._tok[:, None]),
+            jnp.asarray(self._pos), sd)
+        self.kv.update(new_cache)
+        nxt = np.asarray(nxt)
+        t = self._now()
+        self.metrics.record_step(len(active))
+        for slot in active:
+            state = self.sched.slots[slot]
+            req = state.request
+            tok = int(nxt[slot])
+            self._tok[slot] = tok
+            self._pos[slot] += 1
+            state.next_token = tok
+            state.pos = int(self._pos[slot])
+            fin = req.emit(tok)
+            self.metrics.record_token(req.tenant)
+            if fin:
+                self._finish(slot, t)
+
+    def step(self, now: float) -> bool:
+        """One scheduler iteration: admit into free slots, then decode."""
+        worked = False
+        for slot, req in self.sched.admit(self.queue, now):
+            self.kv.claim(slot)      # kv free list mirrors the slot table
+            self._prefill_into(slot, req, now)
+            worked = True
+        if self.sched.n_active:
+            self._decode_all(now)
+            worked = True
+        return worked
+
+    def run(self, max_steps: int = 1_000_000) -> Metrics:
+        """Drain the queue and all slots; returns the metrics collector."""
+        self.metrics.start(self._now())
+        for _ in range(max_steps):
+            if not len(self.queue) and not self.sched.n_active:
+                break
+            worked = self.step(self._now())
+            if not worked:
+                # nothing active and no arrived request: jump (virtual
+                # clock) or sleep (real clock) to the next arrival
+                nxt = self.queue.next_arrival()
+                if nxt is None:
+                    break
+                if hasattr(self.clock, "advance"):
+                    self.clock.advance(max(0.0, nxt - self._now()))
+                else:
+                    time.sleep(max(0.0, min(0.01, nxt - self._now())))
+        else:
+            raise RuntimeError(f"serve loop did not drain in {max_steps} steps")
+        self.metrics.stop(self._now())
+        return self.metrics
+
+    def reset_metrics(self) -> None:
+        """Fresh metrics collector (e.g. after jit warmup), same engine."""
+        self.metrics = Metrics(self.n_slots)
+        self._t0 = None
+
+    def serve(self, requests: List[tuple], max_new_tokens: int = 16) -> List[np.ndarray]:
+        """Convenience: submit (tenant, prompt) pairs, run, return outputs."""
+        reqs = [self.submit(t, p, max_new_tokens=max_new_tokens)
+                for t, p in requests]
+        self.run()
+        return [r.output() for r in reqs]
+
+
+# ---------------------------------------------------------------------------
+# Static engine (reference path + compatibility shim)
+# ---------------------------------------------------------------------------
 class Engine:
     def __init__(self, cfg: ArchConfig, base_params: Any, max_seq: int = 256):
         self.cfg = cfg
@@ -65,6 +389,7 @@ class Engine:
         self.store = DeltaStore()
         self._prefill = jax.jit(lambda p, b, c, d: lm.prefill(cfg, p, b, c, deltas=d))
         self._decode = jax.jit(lambda p, c, t, pos, d: lm.decode_step(cfg, p, c, t, pos, deltas=d))
+        self._cont: Optional[ContinuousEngine] = None
 
     def register_tenant(self, name: str, deltas: Any, report=None):
         return self.store.register(name, deltas, report)
@@ -95,14 +420,45 @@ class Engine:
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         gen = np.stack(out, axis=1)
         if stop_token is not None:
-            # mask everything after the first stop token
-            stopped = np.cumsum(gen == stop_token, axis=1) > 0
-            gen = np.where(np.roll(stopped, 1, axis=1) & stopped, stop_token, gen)
+            gen = mask_after_stop(gen, stop_token)
         return gen
+
+    # -- continuous-batching shim -------------------------------------------
+    def _continuous(self) -> ContinuousEngine:
+        if self._cont is None:
+            self._cont = ContinuousEngine(
+                self.cfg, self.base, n_slots=8, max_seq=self.max_seq,
+                store=self.store)
+        return self._cont
 
     def serve_batch(self, requests: list[tuple[str, np.ndarray]],
                     max_new_tokens: int = 16) -> list[np.ndarray]:
-        """Paper's scheme: group requests by tenant, run each group once."""
+        """Serve a mixed request batch.
+
+        Thin shim over :class:`ContinuousEngine`; falls back to the legacy
+        per-tenant static grouping when slot dispatch cannot apply to this
+        arch/delta combination.
+        """
+        try:
+            eng = self._continuous()
+            eng._refresh_stacked()   # raises for non-stackable tenant sets
+        except (ValueError, NotImplementedError):
+            # slot dispatch inapplicable (MoE deltas, heterogeneous specs,
+            # encdec/vlm): legacy per-tenant grouping still serves these
+            return self._serve_batch_grouped(requests, max_new_tokens)
+        for tenant, prompt in requests:
+            # capacity errors must NOT fall back: the grouped path would
+            # silently ring-wrap the cache and truncate context
+            L = len(np.asarray(prompt).reshape(-1))
+            eng.buckets.bucket(L)
+            if L + max_new_tokens > self.max_seq:
+                raise ValueError(
+                    f"request (prompt {L} + max_new {max_new_tokens}) "
+                    f"exceeds max_seq={self.max_seq}")
+        return eng.serve(requests, max_new_tokens=max_new_tokens)
+
+    def _serve_batch_grouped(self, requests, max_new_tokens: int = 16):
+        """Legacy static path: group requests by tenant, run each group."""
         by_tenant: dict[str, list[int]] = {}
         for i, (tenant, _) in enumerate(requests):
             by_tenant.setdefault(tenant, []).append(i)
@@ -118,12 +474,26 @@ class Engine:
         return results  # type: ignore
 
     def memory_report(self) -> dict:
+        """Deployment memory ledger.
+
+        Baselines are explicit (the old ``bytes_vs_n_full_models`` divided
+        by ``base * (n + 1)``, silently comparing against base + n full
+        models):
+
+        * ``bytes_vs_n_full_models``      — ours / (n full fine-tuned
+          models), the paper's Fig. 2 comparison: without delta
+          compression each tenant ships a full copy.
+        * ``bytes_vs_base_plus_n_full``   — ours / (base + n full models),
+          for deployments that must also keep the control-arm base.
+        """
         base = tree_bytes(self.base)
         deltas = self.store.total_bytes()
-        n = max(len(self.store.names()), 1)
+        n = len(self.store.names())
+        ours = base + deltas
         return {
             "base_bytes": base,
             "delta_bytes_total": deltas,
             "n_tenants": n,
-            "bytes_vs_n_full_models": (base + deltas) / (base * (n + 1) if n else base),
+            "bytes_vs_n_full_models": ours / (base * n) if n else 1.0,
+            "bytes_vs_base_plus_n_full": ours / (base * (n + 1)),
         }

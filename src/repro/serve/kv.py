@@ -1,0 +1,69 @@
+"""Slot-based paged KV cache for continuous batching.
+
+One persistent decode cache of ``n_slots`` rows (the "pages") lives on
+device. A freshly prefilled sequence (batch-1 cache) is *inserted* into a
+free slot mid-flight without touching the other rows; a finished sequence
+just releases its slot index — no device work, the row is garbage until
+the next insert overwrites it.
+
+This works because every leaf of the model cache leads with the batch
+dim (``models.lm.cache_specs``): attention k/v/pos rings, SSM conv/state,
+RG-LRU conv/h, and cross-attention memories all slice per row.
+"""
+from __future__ import annotations
+
+from typing import Any, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.arch import ArchConfig
+from repro.models import lm
+
+
+class SlotKVCache:
+    """Fixed-slot device cache with mid-flight row insertion."""
+
+    def __init__(self, cfg: ArchConfig, n_slots: int, max_seq: int,
+                 enc_len: int = 0):
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.cache: Any = lm.init_cache(cfg, n_slots, max_seq, enc_len=enc_len)
+        self._free: List[int] = list(range(n_slots))
+        # donate the old cache buffers: insertion is an in-place row write
+        self._insert = jax.jit(self._insert_impl, donate_argnums=0)
+
+    @staticmethod
+    def _insert_impl(cache, row_cache, slot):
+        # some mixers keep prefill state in f32; the persistent ring is the
+        # cache-spec dtype, so cast like decode's own cache writes do
+        return jax.tree.map(lambda g, r: g.at[slot].set(r[0].astype(g.dtype)),
+                            cache, row_cache)
+
+    # -- slot accounting ----------------------------------------------------
+    def claim(self, slot: int) -> None:
+        """Mark a specific slot occupied (scheduler-chosen slot id)."""
+        assert slot in self._free, f"slot {slot} is not free"
+        self._free.remove(slot)
+
+    def release(self, slot: int) -> None:
+        assert slot not in self._free, f"slot {slot} double-freed"
+        self._free.append(slot)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def occupancy(self) -> float:
+        return 1.0 - len(self._free) / self.n_slots
+
+    # -- device ops ---------------------------------------------------------
+    def insert(self, slot: int, row_cache: Any) -> None:
+        """Copy a batch-1 cache into row ``slot`` of the shared cache."""
+        self.cache = self._insert(self.cache, row_cache, jnp.int32(slot))
+
+    def update(self, new_cache: Any) -> None:
+        """Swap in the post-decode-step cache."""
+        self.cache = new_cache

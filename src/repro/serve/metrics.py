@@ -1,0 +1,110 @@
+"""Per-tenant serving metrics: throughput, TTFT, latency, occupancy.
+
+Collected host-side by the continuous engine with an injectable clock so
+tests and benchmarks get deterministic numbers. ``report()`` returns a
+plain-dict snapshot suitable for JSON (BENCH_serve.json).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+def _pct(xs: List[float], q: float) -> Optional[float]:
+    if not xs:
+        return None
+    return float(np.percentile(np.asarray(xs, np.float64), q))
+
+
+@dataclass
+class TenantStats:
+    n_requests: int = 0
+    n_tokens: int = 0
+    ttfts: List[float] = field(default_factory=list)      # arrival -> first token
+    queue_waits: List[float] = field(default_factory=list)  # arrival -> admit
+    latencies: List[float] = field(default_factory=list)  # arrival -> done
+
+    def report(self, wall_time: float) -> dict:
+        return {
+            "requests": self.n_requests,
+            "tokens": self.n_tokens,
+            "tokens_per_sec": self.n_tokens / wall_time if wall_time > 0 else None,
+            "ttft_p50": _pct(self.ttfts, 50), "ttft_p95": _pct(self.ttfts, 95),
+            "queue_wait_p50": _pct(self.queue_waits, 50),
+            "latency_p50": _pct(self.latencies, 50),
+            "latency_p95": _pct(self.latencies, 95),
+        }
+
+
+class Metrics:
+    """Aggregates per-tenant and whole-engine serving statistics."""
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self.tenants: Dict[str, TenantStats] = {}
+        self.step_active: List[int] = []     # active slots at each decode step
+        self.n_decode_steps = 0
+        self.n_prefills = 0
+        self.t_start: Optional[float] = None
+        self.t_end: Optional[float] = None
+
+    def _tenant(self, name: Optional[str]) -> TenantStats:
+        key = name if name is not None else "__base__"
+        return self.tenants.setdefault(key, TenantStats())
+
+    # -- recording hooks (driven by the engine) -----------------------------
+    def start(self, now: float) -> None:
+        if self.t_start is None:
+            self.t_start = now
+
+    def stop(self, now: float) -> None:
+        self.t_end = now
+
+    def record_admit(self, tenant: Optional[str], wait: float) -> None:
+        t = self._tenant(tenant)
+        t.n_requests += 1
+        t.queue_waits.append(wait)
+        self.n_prefills += 1
+
+    def record_first_token(self, tenant: Optional[str], ttft: float) -> None:
+        self._tenant(tenant).ttfts.append(ttft)
+
+    def record_token(self, tenant: Optional[str], n: int = 1) -> None:
+        self._tenant(tenant).n_tokens += n
+
+    def record_done(self, tenant: Optional[str], latency: float) -> None:
+        self._tenant(tenant).latencies.append(latency)
+
+    def record_step(self, n_active: int) -> None:
+        self.n_decode_steps += 1
+        self.step_active.append(n_active)
+
+    # -- reporting ----------------------------------------------------------
+    @property
+    def occupancy(self) -> Optional[float]:
+        if not self.step_active:
+            return None
+        return float(np.mean(self.step_active)) / self.n_slots
+
+    def report(self) -> dict:
+        wall = 0.0
+        if self.t_start is not None and self.t_end is not None:
+            wall = self.t_end - self.t_start
+        total_tokens = sum(t.n_tokens for t in self.tenants.values())
+        all_ttfts = [x for t in self.tenants.values() for x in t.ttfts]
+        return {
+            "wall_time_s": wall,
+            "n_slots": self.n_slots,
+            "decode_steps": self.n_decode_steps,
+            "prefills": self.n_prefills,
+            "batch_occupancy": self.occupancy,
+            "total_tokens": total_tokens,
+            "tokens_per_sec": total_tokens / wall if wall > 0 else None,
+            # pooled across all requests (a median of per-tenant medians
+            # is not a p50)
+            "ttft_p50": _pct(all_ttfts, 50),
+            "ttft_p95": _pct(all_ttfts, 95),
+            "tenants": {k: t.report(wall) for k, t in sorted(self.tenants.items())},
+        }

@@ -1,0 +1,222 @@
+"""Continuous-batching scheduler: requests, length buckets, slot packing.
+
+The scheduler owns *admission policy only* — which pending request goes
+into which free KV slot, and when. All jax work (prefill, batched decode)
+stays in ``serve.engine``; all cache storage in ``serve.kv``. This keeps
+the policy unit-testable without compiling anything.
+
+Design points (serve/README.md has the full picture):
+
+* Requests arrive with ``(arrival, deadline)`` metadata; admission order
+  is earliest-deadline-first, ties broken by arrival then id — a simple,
+  deterministic policy that later PRs can swap out.
+* Prompt lengths are rounded up to a small set of **buckets** (powers of
+  two by default) and left-padded, so jit compiles at most once per
+  bucket instead of once per distinct prompt length. Archs whose mixers
+  carry sequence state (ssm/rec) cannot be left-padded without polluting
+  the state, so they use ``exact=True`` buckets (one shape per distinct
+  length — still bounded by the number of distinct lengths seen).
+* A slot is freed **only** when its sequence finishes (stop token or
+  token budget). Unfinished sequences are never evicted; under slot
+  pressure new requests simply wait in the queue.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Requests
+# ---------------------------------------------------------------------------
+@dataclass
+class Request:
+    """One generation request plus its lifecycle bookkeeping."""
+    rid: int
+    tenant: Optional[str]            # None = raw base model
+    prompt: np.ndarray               # [L] int32
+    max_new_tokens: int = 16
+    stop_token: Optional[int] = None
+    arrival: float = 0.0
+    deadline: Optional[float] = None
+    on_token: Optional[Callable[["Request", int, bool], None]] = None
+
+    # -- filled in by the engine --------------------------------------------
+    tokens: List[int] = field(default_factory=list)
+    t_admitted: Optional[float] = None
+    t_first_token: Optional[float] = None
+    t_done: Optional[float] = None
+
+    @property
+    def done(self) -> bool:
+        return self.t_done is not None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[-1])
+
+    def output(self) -> np.ndarray:
+        return np.asarray(self.tokens, np.int32)
+
+    def emit(self, token: int) -> bool:
+        """Record one generated token, fire the streaming callback, and
+        return whether the sequence just finished (single source of the
+        stop condition)."""
+        self.tokens.append(int(token))
+        fin = self.should_stop()
+        if self.on_token is not None:
+            self.on_token(self, int(token), fin)
+        return fin
+
+    def should_stop(self) -> bool:
+        if self.stop_token is not None and self.tokens \
+                and self.tokens[-1] == self.stop_token:
+            return True
+        return len(self.tokens) >= self.max_new_tokens
+
+
+class RequestQueue:
+    """Arrival-ordered queue with deadline-aware pop."""
+
+    def __init__(self):
+        self._waiting: List[Request] = []
+        self._ids = itertools.count()
+
+    def submit(self, tenant: Optional[str], prompt: np.ndarray, *,
+               max_new_tokens: int = 16, stop_token: Optional[int] = None,
+               arrival: float = 0.0, deadline: Optional[float] = None,
+               on_token=None) -> Request:
+        req = Request(rid=next(self._ids), tenant=tenant,
+                      prompt=np.asarray(prompt, np.int32).reshape(-1),
+                      max_new_tokens=max_new_tokens, stop_token=stop_token,
+                      arrival=arrival, deadline=deadline, on_token=on_token)
+        self._waiting.append(req)
+        return req
+
+    def __len__(self) -> int:
+        return len(self._waiting)
+
+    def ready(self, now: float) -> List[Request]:
+        return [r for r in self._waiting if r.arrival <= now]
+
+    def next_arrival(self) -> Optional[float]:
+        return min((r.arrival for r in self._waiting), default=None)
+
+    def pop_ready(self, now: float) -> Optional[Request]:
+        """Earliest deadline first among arrived requests; FIFO otherwise."""
+        ready = self.ready(now)
+        if not ready:
+            return None
+        best = min(ready, key=lambda r: (
+            r.deadline if r.deadline is not None else float("inf"),
+            r.arrival, r.rid))
+        self._waiting.remove(best)
+        return best
+
+
+# ---------------------------------------------------------------------------
+# Length buckets
+# ---------------------------------------------------------------------------
+class LengthBuckets:
+    """Round prompt lengths up to a bounded set of jit shapes."""
+
+    def __init__(self, min_bucket: int = 8, max_bucket: int = 4096,
+                 exact: bool = False):
+        self.min_bucket = min_bucket
+        self.max_bucket = max_bucket
+        self.exact = exact
+        self.seen: set[int] = set()
+
+    def bucket(self, length: int) -> int:
+        if length > self.max_bucket:
+            raise ValueError(f"prompt length {length} exceeds max bucket "
+                             f"{self.max_bucket}")
+        if self.exact:
+            b = length
+        else:
+            b = self.min_bucket
+            while b < length:
+                b *= 2
+            # a non-power-of-two max_bucket must still admit prompts that
+            # fit: clamp instead of overshooting past the cap
+            b = min(b, self.max_bucket)
+        self.seen.add(b)
+        return b
+
+
+# ---------------------------------------------------------------------------
+# Slot table
+# ---------------------------------------------------------------------------
+@dataclass
+class SlotState:
+    """Runtime state of one occupied decode slot."""
+    request: Request
+    next_token: int                  # last sampled token (decode input)
+    pos: int                         # next decode position (= tokens so far)
+    tenant_row: int                  # row in the tenant-stacked delta tree
+
+
+class Scheduler:
+    """Packs mixed-tenant requests into fixed decode slots."""
+
+    def __init__(self, n_slots: int, buckets: LengthBuckets):
+        self.n_slots = n_slots
+        self.buckets = buckets
+        self.slots: List[Optional[SlotState]] = [None] * n_slots
+
+    # -- introspection ------------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def active_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is not None]
+
+    @property
+    def n_active(self) -> int:
+        return len(self.active_slots())
+
+    # -- transitions --------------------------------------------------------
+    def admit(self, queue: RequestQueue, now: float) -> List[tuple]:
+        """Fill free slots from the queue; returns [(slot, request)]."""
+        admitted = []
+        for slot in self.free_slots():
+            req = queue.pop_ready(now)
+            if req is None:
+                break
+            req.t_admitted = now
+            admitted.append((slot, req))
+        return admitted
+
+    def place(self, slot: int, state: SlotState) -> None:
+        assert self.slots[slot] is None, f"slot {slot} already occupied"
+        self.slots[slot] = state
+
+    def release(self, slot: int) -> Request:
+        """Free a slot. Refuses to drop an unfinished sequence."""
+        state = self.slots[slot]
+        assert state is not None, f"slot {slot} already free"
+        if not state.request.done:
+            raise RuntimeError(
+                f"refusing to evict unfinished request {state.request.rid} "
+                f"from slot {slot}")
+        self.slots[slot] = None
+        return state.request
+
+
+class VirtualClock:
+    """Deterministic clock for tests/benchmarks: advances only on demand."""
+
+    def __init__(self, t0: float = 0.0, tick: float = 0.0):
+        self.t = t0
+        self.tick = tick
+
+    def __call__(self) -> float:
+        self.t += self.tick
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        self.t += dt
+        return self.t

@@ -2,6 +2,8 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+pytest.importorskip("hypothesis")  # optional dep: skip cleanly on bare CPU containers
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

@@ -1,0 +1,392 @@
+"""Continuous-batching scheduler invariants.
+
+The acceptance bar for the serving subsystem:
+* mixed-tenant slot batches are token-identical to the per-tenant
+  reference path,
+* eviction never drops an unfinished sequence (everything submitted
+  completes, bit-exact, even under slot pressure),
+* jit compile count stays bounded by the number of length buckets.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import (
+    DeltaDQSpec,
+    compress,
+    stack_tenant_deltas,
+    wrap_slot_deltas,
+    zero_delta_like,
+)
+from repro.models import lm
+from repro.serve import (
+    ContinuousEngine,
+    Engine,
+    LengthBuckets,
+    RequestQueue,
+    Scheduler,
+    VirtualClock,
+    mask_after_stop,
+)
+
+SPEC = DeltaDQSpec(alpha=2.0, k_bits=8, h_g=32)
+
+
+def _make_tenants(cfg, base, n, rng, scale=0.05):
+    out = []
+    for t in range(n):
+        ft = jax.tree.map(
+            lambda p, t=t: p + scale * jax.random.normal(
+                jax.random.fold_in(rng, 7 + t), p.shape, jnp.float32).astype(p.dtype)
+            if p.ndim >= 2 else p, base)
+        deltas, _ = compress(base, ft, SPEC)
+        out.append(deltas)
+    return out
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_smoke_config("llama3.2-1b")
+    rng = jax.random.PRNGKey(0)
+    base = lm.init_params(cfg, rng)
+    tenants = _make_tenants(cfg, base, 3, rng)
+    return cfg, base, tenants
+
+
+# ---------------------------------------------------------------------------
+# Unit: scheduler policy pieces (no jax)
+# ---------------------------------------------------------------------------
+def test_length_buckets_pow2_and_exact():
+    b = LengthBuckets(min_bucket=8, max_bucket=64)
+    assert [b.bucket(n) for n in (1, 8, 9, 16, 33)] == [8, 8, 16, 16, 64]
+    assert b.seen == {8, 16, 64}
+    with pytest.raises(ValueError):
+        b.bucket(65)
+    e = LengthBuckets(min_bucket=8, exact=True)
+    assert e.bucket(13) == 13
+    # non-power-of-two cap: clamp, don't overshoot past prompts that fit
+    c = LengthBuckets(min_bucket=8, max_bucket=48)
+    assert c.bucket(33) == 48
+
+
+def test_queue_deadline_priority():
+    q = RequestQueue()
+    r_late = q.submit("a", np.zeros(4), arrival=0.0, deadline=9.0)
+    r_urgent = q.submit("b", np.zeros(4), arrival=0.0, deadline=1.0)
+    r_future = q.submit("c", np.zeros(4), arrival=5.0)
+    assert q.pop_ready(0.0) is r_urgent
+    assert q.pop_ready(0.0) is r_late
+    assert q.pop_ready(0.0) is None          # not yet arrived
+    assert q.pop_ready(6.0) is r_future
+
+
+def test_scheduler_refuses_to_evict_unfinished():
+    q = RequestQueue()
+    q.submit("a", np.zeros(4))
+    sched = Scheduler(2, LengthBuckets())
+    [(slot, req)] = sched.admit(q, now=0.0)
+    from repro.serve.scheduler import SlotState
+    sched.place(slot, SlotState(request=req, next_token=0, pos=4, tenant_row=1))
+    with pytest.raises(RuntimeError):
+        sched.release(slot)
+    req.t_done = 1.0                          # finished -> release allowed
+    assert sched.release(slot) is req
+    assert sched.free_slots() == [0, 1]
+
+
+# ---------------------------------------------------------------------------
+# Satellite fixes
+# ---------------------------------------------------------------------------
+def test_stop_token_mask_no_wraparound():
+    stop = 7
+    # stop token in the FINAL step must not corrupt column 0 (np.roll bug)
+    gen = np.array([[3, 4, 5, 7],
+                    [7, 1, 2, 3],
+                    [1, 7, 7, 2],
+                    [1, 2, 3, 4]])
+    out = mask_after_stop(gen, stop)
+    np.testing.assert_array_equal(out, np.array([
+        [3, 4, 5, 7],          # final-step stop: earlier columns untouched
+        [7, 7, 7, 7],          # everything after first stop masked
+        [1, 7, 7, 7],
+        [1, 2, 3, 4],          # no stop: unchanged
+    ]))
+
+
+def test_memory_report_baselines_pinned(dense_setup):
+    cfg, base, tenants = dense_setup
+    eng = Engine(cfg, base, max_seq=16)
+    for i, d in enumerate(tenants):
+        eng.register_tenant(f"t{i}", d)
+    rep = eng.memory_report()
+    base_b, delta_b, n = rep["base_bytes"], rep["delta_bytes_total"], 3
+    assert rep["n_tenants"] == n
+    # ours vs n full fine-tuned models (paper Fig. 2 comparison)
+    assert rep["bytes_vs_n_full_models"] == pytest.approx(
+        (base_b + delta_b) / (n * base_b))
+    # ours vs base + n full models (control arm kept resident)
+    assert rep["bytes_vs_base_plus_n_full"] == pytest.approx(
+        (base_b + delta_b) / ((n + 1) * base_b))
+    assert rep["bytes_vs_n_full_models"] < 1.0
+
+
+# ---------------------------------------------------------------------------
+# Slot-dispatch numerics: gathered per-slot deltas == per-tenant deltas
+# ---------------------------------------------------------------------------
+def test_slot_decode_logits_match_per_tenant(dense_setup):
+    cfg, base, tenants = dense_setup
+    max_seq = 32
+    rng = jax.random.PRNGKey(3)
+    prompt = jnp.asarray(jax.random.randint(rng, (1, 6), 0, cfg.vocab))
+    stacked = stack_tenant_deltas([zero_delta_like(tenants[0])] + tenants)
+
+    # reference: each tenant decodes alone (scalar-pos path)
+    ref_logits = []
+    for d in [None] + tenants:
+        cache = lm.init_cache(cfg, 1, max_seq)
+        lg, cache = lm.prefill(cfg, base, {"tokens": prompt}, cache, deltas=d)
+        tok = jnp.argmax(lg, -1).astype(jnp.int32)
+        lg, _ = lm.decode_step(cfg, base, cache, tok[:, None], jnp.int32(6), deltas=d)
+        ref_logits.append(np.asarray(lg[0]))
+
+    # mixed: all four rows (base + 3 tenants) in one slot batch
+    B = 4
+    cache = lm.init_cache(cfg, B, max_seq)
+    toks = jnp.tile(prompt, (B, 1))
+    lg, cache = lm.prefill(cfg, base, {"tokens": toks}, cache,
+                           deltas=wrap_slot_deltas(stacked, jnp.arange(B)))
+    tok = jnp.argmax(lg, -1).astype(jnp.int32)
+    lg, _ = lm.decode_step(cfg, base, cache, tok[:, None],
+                           jnp.full((B,), 6, jnp.int32),
+                           deltas=wrap_slot_deltas(stacked, jnp.arange(B)))
+    for b in range(B):
+        np.testing.assert_array_equal(np.asarray(lg[b]), ref_logits[b])
+
+
+def test_delta_spmm_slots_matches_per_row_reference():
+    from repro.core import groupwise_dropout_pack, reconstruct_dense
+    from repro.core.apply import stack_tenant_deltas as stack
+    from repro.kernels import ops
+    rng = jax.random.PRNGKey(0)
+    h_in, h_out, B = 64, 32, 5
+    deltas = [groupwise_dropout_pack(jax.random.fold_in(rng, t),
+                                     jax.random.normal(jax.random.fold_in(rng, 10 + t),
+                                                       (h_in, h_out)) * 0.01,
+                                     h_g=16, alpha=2.0, k_bits=8, m=1)
+              for t in range(3)]
+    stacked = stack(deltas)
+    slots = jnp.asarray([0, 2, 1, 1, 0])
+    x = jax.random.normal(jax.random.fold_in(rng, 99), (B, 1, h_in))
+    from repro.core.apply import SlotDelta
+    gathered = SlotDelta(stacked, slots).gather()
+    y = ops.delta_spmm_slots(x, gathered)
+    for b in range(B):
+        want = x[b] @ reconstruct_dense(deltas[int(slots[b])], dtype=x.dtype)
+        np.testing.assert_allclose(np.asarray(y[b]), np.asarray(want),
+                                   rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Engine invariants under a mixed randomized stream
+# ---------------------------------------------------------------------------
+def test_mixed_stream_token_identical_and_bounded_compiles(dense_setup):
+    cfg, base, tenants = dense_setup
+    eng = ContinuousEngine(cfg, base, n_slots=3, max_seq=32,
+                           clock=VirtualClock(tick=1e-3))
+    ref = Engine(cfg, base, max_seq=32)
+    for i, d in enumerate(tenants):
+        eng.register_tenant(f"t{i}", d)
+        ref.register_tenant(f"t{i}", d)
+
+    # >=3 tenants (incl. base), >=2 prompt lengths, staggered arrivals,
+    # more requests than slots
+    rng = jax.random.PRNGKey(9)
+    lengths = [5, 9, 7, 12, 5, 9, 3, 7]
+    reqs = []
+    for i, L in enumerate(lengths):
+        prompt = np.asarray(jax.random.randint(
+            jax.random.fold_in(rng, i), (L,), 0, cfg.vocab))
+        tenant = f"t{i % 3}" if i % 4 else None
+        reqs.append((tenant, prompt,
+                     eng.submit(tenant, prompt, max_new_tokens=6,
+                                arrival=0.002 * i)))
+    metrics = eng.run()
+
+    for tenant, prompt, r in reqs:
+        want = ref.generate(tenant, prompt[None], max_new_tokens=6)[0]
+        np.testing.assert_array_equal(r.output(), want, err_msg=str(tenant))
+
+    # jit compiled at most once per length bucket (prefill) + once (decode)
+    assert eng.prefill_shapes == {8, 16}
+    assert eng._prefill._cache_size() <= len(eng.prefill_shapes)
+    assert eng._decode._cache_size() == 1
+
+    rep = metrics.report()
+    assert rep["prefills"] == len(lengths)
+    assert rep["total_tokens"] == 6 * len(lengths)
+    assert 0.0 < rep["batch_occupancy"] <= 1.0
+    for name in ("t0", "t1", "t2", "__base__"):
+        t = rep["tenants"][name]
+        assert t["requests"] >= 1 and t["ttft_p50"] is not None
+
+
+def test_eviction_never_drops_unfinished_randomized(dense_setup):
+    """Slot pressure + random lengths/budgets: every request completes
+    bit-exact; slots are only recycled after their sequence finishes."""
+    cfg, base, tenants = dense_setup
+    eng = ContinuousEngine(cfg, base, n_slots=2, max_seq=32,
+                           clock=VirtualClock(tick=1e-3))
+    ref = Engine(cfg, base, max_seq=32)
+    for i, d in enumerate(tenants):
+        eng.register_tenant(f"t{i}", d)
+        ref.register_tenant(f"t{i}", d)
+
+    rs = np.random.RandomState(42)
+    reqs = []
+    for i in range(10):
+        L = int(rs.randint(3, 14))
+        n_new = int(rs.randint(1, 8))
+        prompt = rs.randint(0, cfg.vocab, size=L)
+        tenant = f"t{rs.randint(3)}"
+        reqs.append((tenant, prompt, n_new,
+                     eng.submit(tenant, prompt, max_new_tokens=n_new,
+                                arrival=float(rs.rand() * 0.01))))
+    eng.run()
+
+    for tenant, prompt, n_new, r in reqs:
+        assert r.done and len(r.tokens) == n_new
+        want = ref.generate(tenant, prompt[None], max_new_tokens=n_new)[0]
+        np.testing.assert_array_equal(r.output(), want)
+    assert eng.kv.n_free == eng.n_slots          # all slots returned
+    assert eng.sched.active_slots() == []
+
+
+def test_stop_token_frees_slot_early(dense_setup):
+    cfg, base, tenants = dense_setup
+    eng = ContinuousEngine(cfg, base, n_slots=1, max_seq=32)
+    eng.register_tenant("t0", tenants[0])
+    ref = Engine(cfg, base, max_seq=32)
+    ref.register_tenant("t0", tenants[0])
+
+    prompt = np.arange(5) % cfg.vocab
+    want = ref.generate("t0", prompt[None], max_new_tokens=8)[0]
+    stop = int(want[2])                           # force an early stop
+    r1 = eng.submit("t0", prompt, max_new_tokens=8, stop_token=stop)
+    r2 = eng.submit("t0", prompt, max_new_tokens=4)
+    eng.run()
+    assert r1.done and r1.tokens[-1] == stop and len(r1.tokens) <= 3
+    assert r2.done and len(r2.tokens) == 4        # queued request still served
+
+
+def test_serve_batch_shim_matches_generate(dense_setup):
+    cfg, base, tenants = dense_setup
+    eng = Engine(cfg, base, max_seq=32)
+    for i, d in enumerate(tenants):
+        eng.register_tenant(f"t{i}", d)
+    prompts = [np.asarray(jax.random.randint(
+        jax.random.fold_in(jax.random.PRNGKey(1), i), (6,), 0, cfg.vocab))
+        for i in range(4)]
+    reqs = [("t0", prompts[0]), ("t1", prompts[1]),
+            ("t0", prompts[2]), ("t2", prompts[3])]
+    outs = eng.serve_batch(reqs, max_new_tokens=4)
+    assert len(outs) == 4
+    for (tenant, prompt), out in zip(reqs, outs):
+        want = eng.generate(tenant, prompt[None], max_new_tokens=4)[0]
+        np.testing.assert_array_equal(out, want)
+
+
+def test_continuous_engine_ssm_exact_buckets():
+    """State-carrying mixers can't be left-padded: exact buckets, still
+    token-identical through the slot path."""
+    cfg = get_smoke_config("mamba2-370m")
+    rng = jax.random.PRNGKey(0)
+    base = lm.init_params(cfg, rng)
+    tenants = _make_tenants(cfg, base, 2, rng)
+    eng = ContinuousEngine(cfg, base, n_slots=2, max_seq=32)
+    ref = Engine(cfg, base, max_seq=32)
+    for i, d in enumerate(tenants):
+        eng.register_tenant(f"t{i}", d)
+        ref.register_tenant(f"t{i}", d)
+    assert eng.buckets.exact
+
+    prompts = [np.asarray(jax.random.randint(
+        jax.random.fold_in(rng, 60 + i), (L,), 0, cfg.vocab))
+        for i, L in enumerate((6, 9, 6))]
+    rs = [eng.submit(f"t{i % 2}", p, max_new_tokens=4)
+          for i, p in enumerate(prompts)]
+    eng.run()
+    for i, (p, r) in enumerate(zip(prompts, rs)):
+        want = ref.generate(f"t{i % 2}", p[None], max_new_tokens=4)[0]
+        np.testing.assert_array_equal(r.output(), want)
+
+
+def test_incompatible_tenant_rejected_at_registration(dense_setup):
+    """A tenant whose packing spec can't join the stack fails at
+    register_tenant, not mid-run — and the engine stays fully usable."""
+    cfg, base, tenants = dense_setup
+    eng = ContinuousEngine(cfg, base, n_slots=2, max_seq=32)
+    eng.register_tenant("t0", tenants[0])
+
+    ft = jax.tree.map(
+        lambda p: p + 0.05 * jax.random.normal(
+            jax.random.PRNGKey(77), p.shape, jnp.float32).astype(p.dtype)
+        if p.ndim >= 2 else p, base)
+    other_spec, _ = compress(base, ft, DeltaDQSpec(alpha=2.0, k_bits=8, h_g=16))
+    with pytest.raises(ValueError):
+        eng.register_tenant("bad", other_spec)
+    assert "bad" not in {t.name for t in eng.store.ordered()}
+
+    # engine still serves, no slot was leaked
+    r = eng.submit("t0", np.arange(5) % cfg.vocab, max_new_tokens=3)
+    eng.run()
+    assert r.done and len(r.tokens) == 3
+    assert eng.kv.n_free == eng.n_slots
+
+
+def test_clamped_bucket_pad_overwrite_token_identical(dense_setup):
+    """Non-pow2 max_seq: the bucket clamps to max_seq and decode reuses
+    pad ring slots; output must still match the reference exactly, and
+    genuinely overlong requests must still be rejected."""
+    cfg, base, tenants = dense_setup
+    eng = ContinuousEngine(cfg, base, n_slots=1, max_seq=48)
+    ref = Engine(cfg, base, max_seq=48)
+    eng.register_tenant("t0", tenants[0])
+    ref.register_tenant("t0", tenants[0])
+    prompt = np.arange(33) % cfg.vocab        # bucket 64 -> clamped to 48
+    r = eng.submit("t0", prompt, max_new_tokens=5)
+    eng.run()
+    want = ref.generate("t0", prompt[None], max_new_tokens=5)[0]
+    np.testing.assert_array_equal(r.output(), want)
+    with pytest.raises(ValueError):
+        eng.submit("t0", np.arange(45) % cfg.vocab, max_new_tokens=5)
+
+
+def test_live_unregister_refuses_to_remap_inflight_rows(dense_setup):
+    cfg, base, tenants = dense_setup
+    eng = ContinuousEngine(cfg, base, n_slots=1, max_seq=32)
+    eng.register_tenant("t0", tenants[0])
+    eng.register_tenant("t1", tenants[1])
+    eng.submit("t1", np.arange(5) % cfg.vocab, max_new_tokens=6)
+    eng.step(0.0)                    # prefill + first decode, in flight
+    eng.store.unregister("t0")       # would shift t1's stack row 2 -> 1
+    with pytest.raises(RuntimeError, match="rows shifted"):
+        eng.step(0.0)
+
+
+def test_moe_tenants_fall_back_to_grouped():
+    cfg = get_smoke_config("qwen3-moe-30b-a3b")
+    cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    rng = jax.random.PRNGKey(0)
+    base = lm.init_params(cfg, rng)
+    [deltas] = _make_tenants(cfg, base, 1, rng)
+    eng = Engine(cfg, base, max_seq=32)
+    eng.register_tenant("m", deltas)
+    prompts = np.asarray(jax.random.randint(rng, (2, 6), 0, cfg.vocab))
+    reqs = [("m", prompts[0]), ("m", prompts[1]), ("m", prompts[0])]
+    outs = eng.serve_batch(reqs, max_new_tokens=3)   # falls back, no crash
+    assert len(outs) == 3
+    np.testing.assert_array_equal(outs[0], outs[2])
