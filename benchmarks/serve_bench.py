@@ -10,11 +10,24 @@ Measures, on the smoke config:
 
 and writes ``BENCH_serve.json`` at the repo root so later PRs have a perf
 trajectory to beat.
+
+CI regression gate::
+
+    python -m benchmarks.serve_bench --quick --out BENCH_serve.fresh.json \
+        --check BENCH_serve.json --tolerance 2.0
+
+``--check`` compares the fresh run against a committed baseline with a
+generous tolerance (CI runners are noisy; 2x catches real regressions,
+not scheduler jitter) and exits non-zero on regression. ``--quick``
+skips the slow 16-tenant run but keeps each remaining row's workload
+identical to the baseline's, so throughput stays comparable.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
+import sys
 import time
 
 import jax
@@ -110,9 +123,55 @@ def continuous_bench(n_tenants: int, n_requests: int = 16, max_new: int = 8,
     return out
 
 
+def compare_against(fresh: dict, baseline_path: str, tolerance: float) -> list:
+    """Regressions of the fresh run vs a committed baseline (throughput
+    may not drop below baseline/tolerance; decode latency may not grow
+    past baseline*tolerance). Returns a list of human-readable failures."""
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    fails = []
+    base_us = baseline.get("micro", {}).get("decode_with_delta_us")
+    fresh_us = fresh.get("micro", {}).get("decode_with_delta_us")
+    if base_us and fresh_us and fresh_us > base_us * tolerance:
+        fails.append(f"decode_with_delta_us {fresh_us:.0f} > "
+                     f"{tolerance}x baseline {base_us:.0f}")
+    base_by_n = {c["n_tenants"]: c for c in baseline.get("continuous", [])}
+    for c in fresh.get("continuous", []):
+        b = base_by_n.get(c["n_tenants"])
+        # only compare identical workloads: a row with a different request
+        # count measures a different queueing regime, not a regression
+        if not b or b.get("n_requests") != c.get("n_requests"):
+            continue
+        floor = b["tokens_per_sec"] / tolerance
+        if c["tokens_per_sec"] < floor:
+            fails.append(
+                f"{c['n_tenants']}-tenant throughput {c['tokens_per_sec']:.0f} "
+                f"tok/s < baseline {b['tokens_per_sec']:.0f}/{tolerance}")
+    return fails
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="trimmed tenant sweep (1/4, skipping the slow "
+                         "16-tenant run) for CI; request count stays the "
+                         "same so rows remain comparable to the baseline")
+    ap.add_argument("--out", default=None,
+                    help="output JSON (default: repo-root BENCH_serve.json; "
+                         "quick runs default to BENCH_serve.quick.json so a "
+                         "trimmed sweep never overwrites the committed "
+                         "baseline)")
+    ap.add_argument("--check", default=None, metavar="BASELINE_JSON",
+                    help="fail (exit 1) on regression vs this baseline")
+    ap.add_argument("--tolerance", type=float, default=2.0)
+    args = ap.parse_args()
+    if args.out is None:
+        args.out = os.path.join(
+            REPO, "BENCH_serve.quick.json" if args.quick else "BENCH_serve.json")
+
+    tenant_sweep = (1, 4) if args.quick else (1, 4, 16)
     report = {"micro": decode_overhead(), "continuous": []}
-    for n_tenants in (1, 4, 16):
+    for n_tenants in tenant_sweep:
         report["continuous"].append(continuous_bench(n_tenants))
 
     base_bytes = report["continuous"][0]["base_bytes"]
@@ -127,16 +186,24 @@ def main():
     print(f"memory_16_tenants: full={full / 1e6:.1f}MB "
           f"deltadq={ours / 1e6:.1f}MB saving={full / ours:.1f}x")
 
-    out_path = os.path.join(REPO, "BENCH_serve.json")
-    with open(out_path, "w") as f:
+    with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
-    print(f"# wrote {out_path}")
+    print(f"# wrote {args.out}")
 
     us = report["micro"]["decode_with_delta_us"]
     csv_row("serve_bench", us,
             f"delta_overhead={report['micro']['delta_overhead_x']:.2f}x;"
             f"mem_saving_16t={full / ours:.1f}x;"
-            f"tok_s_16t={report['continuous'][-1]['tokens_per_sec']:.0f}")
+            f"tok_s={report['continuous'][-1]['tokens_per_sec']:.0f}")
+
+    if args.check:
+        fails = compare_against(report, args.check, args.tolerance)
+        if fails:
+            for f_ in fails:
+                print(f"REGRESSION: {f_}", file=sys.stderr)
+            sys.exit(1)
+        print(f"# bench regression check vs {args.check}: OK "
+              f"(tolerance {args.tolerance}x)")
 
 
 if __name__ == "__main__":

@@ -31,10 +31,78 @@ from repro.core.pack import PackedDelta, reconstruct_dense
 # lowers on real TPUs; everything else uses the XLA fallback.
 _USE_PALLAS = False
 
+# Active serving mesh (set by mesh-mode engines/launchers). When a mesh
+# with a >1 `model` axis is installed, every delta correction routes
+# through the shard_map'd output-column-partitioned path in
+# ``kernels.ops.delta_correction_sharded`` — each shard touches only its
+# own slice of the compressed bytes. One mesh per process.
+_MESH = None
+
 
 def set_use_pallas(flag: bool) -> None:
     global _USE_PALLAS
     _USE_PALLAS = flag
+
+
+def set_mesh(mesh) -> None:
+    """Install (or clear, with None) the process-wide serving mesh."""
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh():
+    return _MESH
+
+
+def _sharded_correction(x: jnp.ndarray, d: PackedDelta):
+    """Mesh-partitioned delta correction, or None if it doesn't apply."""
+    if _MESH is None:
+        return None
+    from repro.kernels import ops
+    return ops.delta_correction_sharded(x, d, _MESH, use_pallas=_USE_PALLAS)
+
+
+@jax.custom_vjp
+def _pinned(c: jnp.ndarray) -> jnp.ndarray:
+    """optimization_barrier with an identity gradient.
+
+    The barrier pins the correction's fusion boundary (bit-identity
+    across mesh layouts, see apply_linear) but has no differentiation
+    rule — a bare barrier would make every ``deltas=`` forward
+    non-differentiable. The barrier is an identity function, so the
+    straight-through VJP is exact.
+    """
+    return jax.lax.optimization_barrier(c)
+
+
+def _pinned_fwd(c):
+    return _pinned(c), None
+
+
+def _pinned_bwd(_, g):
+    return (g,)
+
+
+_pinned.defvjp(_pinned_fwd, _pinned_bwd)
+
+
+def _replicated(t: jnp.ndarray) -> jnp.ndarray:
+    """Pin an activation replicated over the serving mesh.
+
+    The serve layout is column-parallel only: weights shard their output
+    axis, never the contraction axis, and activations are gathered back
+    to replicated after every linear site. Every matmul then reduces
+    over the full contraction locally — in the same order as a single
+    device — which is what makes sharded decode bit-identical to the
+    single-device engine (the CI token-identity check). At decode batch
+    sizes the gathered activations are tiny; the multi-GB object (the
+    base) stays sharded in HBM.
+    """
+    if _MESH is None:
+        return t
+    from jax.sharding import NamedSharding, PartitionSpec
+    return jax.lax.with_sharding_constraint(
+        t, NamedSharding(_MESH, PartitionSpec()))
 
 
 @jax.tree_util.register_pytree_node_class
@@ -85,6 +153,9 @@ def slot_delta_matmul(x: jnp.ndarray, sd: SlotDelta) -> jnp.ndarray:
     hot paths the gathered stack routes through the vmapped Pallas kernel.
     """
     g = sd.gather()
+    y = _sharded_correction(x, g)
+    if y is not None:
+        return y
     if _USE_PALLAS:
         from repro.kernels import ops
         return ops.delta_spmm_slots(x, g)
@@ -96,6 +167,10 @@ def delta_matmul(x: jnp.ndarray, d) -> jnp.ndarray:
     """x [..., h_in] @ dequant(delta) [h_in, h_out] -> [..., h_out]."""
     if isinstance(d, SlotDelta):
         return slot_delta_matmul(x, d)
+    if not d.stack_shape():
+        y = _sharded_correction(x, d)
+        if y is not None:
+            return y
     if _USE_PALLAS and not d.stack_shape():
         from repro.kernels import ops
         return ops.delta_spmm(x, d)
@@ -104,11 +179,23 @@ def delta_matmul(x: jnp.ndarray, d) -> jnp.ndarray:
 
 
 def apply_linear(x: jnp.ndarray, w: jnp.ndarray, d: Optional[PackedDelta] = None) -> jnp.ndarray:
-    """Base matmul plus (optionally) the tenant's delta correction."""
+    """Base matmul plus (optionally) the tenant's delta correction.
+
+    The correction is computed behind an ``optimization_barrier`` and
+    added in f32 with ONE explicit final rounding. Without the barrier
+    XLA fuses the correction into its consumers at fusion-dependent
+    precision, and the fusion decisions shift when the shard_map'd
+    sharded-correction region is present — sharded and single-device
+    decode then drift by an ulp, enough to flip greedy argmax near
+    ties. The pinned boundary + fixed-precision add keep the hot path
+    bit-identical across mesh layouts (the CI token-identity check).
+    """
+    x = _replicated(x)
     y = x @ w
     if d is not None:
-        y = y + delta_matmul(x, d).astype(y.dtype)
-    return y
+        c = _pinned(delta_matmul(x, d).astype(jnp.float32))
+        y = (y.astype(jnp.float32) + c).astype(y.dtype)
+    return _replicated(y)
 
 
 def apply_linear_batched(x: jnp.ndarray, w: jnp.ndarray, d: Optional[PackedDelta] = None) -> jnp.ndarray:
@@ -120,11 +207,16 @@ def apply_linear_batched(x: jnp.ndarray, w: jnp.ndarray, d: Optional[PackedDelta
         raise NotImplementedError(
             "slot-dispatched deltas are not supported at expert-batched "
             "linear sites (MoE); serve these tenants via per-tenant grouping")
+    x = _replicated(x)
     y = jnp.einsum("e...d,edf->e...f", x, w)
     if d is not None:
         dense = reconstruct_dense(d, dtype=x.dtype)  # [E, h_in, h_out]
-        y = y + jnp.einsum("e...d,edf->e...f", x, dense)
-    return y
+        # same fusion pin + fixed-precision add as apply_linear, so MoE
+        # expert-site corrections keep the mesh bit-identity contract too
+        c = _pinned(jnp.einsum("e...d,edf->e...f", x, dense)
+                    .astype(jnp.float32))
+        y = (y.astype(jnp.float32) + c).astype(y.dtype)
+    return _replicated(y)
 
 
 # ---------------------------------------------------------------------------

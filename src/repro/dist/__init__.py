@@ -1,0 +1,34 @@
+"""Distribution layer: sharding rules, ZeRO-1, compressed all-reduce.
+
+One logical-axis table (``sharding.py``) maps every parameter, input,
+cache and packed-delta leaf to a mesh PartitionSpec; ``grad_compress``
+carries the int8 error-feedback all-reduce used by the training
+launcher. ``launch/mesh.py`` assembles these into full serving/training
+layouts.
+"""
+from repro.dist.grad_compress import ErrorFeedback, make_compressed_allreduce
+from repro.dist.sharding import (
+    DEFAULT_RULES,
+    LONG_CONTEXT_OVERRIDES,
+    SERVE_OVERRIDES,
+    TRAIN_OVERRIDES,
+    ShardingRules,
+    batch_axes,
+    cache_axes,
+    tree_shardings,
+    zero1_shardings,
+)
+
+__all__ = [
+    "DEFAULT_RULES",
+    "LONG_CONTEXT_OVERRIDES",
+    "SERVE_OVERRIDES",
+    "TRAIN_OVERRIDES",
+    "ErrorFeedback",
+    "ShardingRules",
+    "batch_axes",
+    "cache_axes",
+    "make_compressed_allreduce",
+    "tree_shardings",
+    "zero1_shardings",
+]

@@ -1,0 +1,107 @@
+"""int8 compressed gradient all-reduce with error feedback.
+
+Data-parallel training at pod scale is bandwidth-bound on the gradient
+all-reduce (DCI for the ``pod`` axis). The classic fix — and the same
+quantize-with-shared-scale trick DeltaDQ uses for delta values — is to
+reduce in int8:
+
+two-phase compressed psum (:func:`_compressed_psum_flat`)
+    phase 1: agree on a scale — ``pmax`` of every device's max-|g|
+    phase 2: quantize to int8 with that shared scale, ``psum`` the int8
+    payload (4x less wire traffic than f32), dequantize, divide by the
+    axis size. Deterministic, and the error is bounded by scale/2 per
+    device.
+
+error feedback (:class:`ErrorFeedback`)
+    the quantization residual is carried to the next step and added
+    before quantizing, so the *time-averaged* reduced gradient is exact
+    — the standard convergence fix for compressed all-reduce.
+
+``make_compressed_allreduce`` is the ``grad_transform`` hook for
+``train.make_train_step``: inside a GSPMD ``jit`` the mean-reduce over
+the data axis is already XLA-inserted, so the transform applies int8
+quantize/dequantize numerics (shared scale, rounding) to the *reduced*
+gradient. Note this is an approximation of the wire format, not an
+exact emulation: the wire-level path (:func:`_compressed_psum_flat`)
+rounds each device's local gradient before the psum — n independent
+roundings (worst case n·scale/2 pre-mean) vs one here. The explicit
+collective form is exercised per-device under ``shard_map`` by
+``tests/test_dist.py``; swapping the training step to run it for real
+needs the grads materialized per-device (shard_map'd backward), a
+follow-up on the ROADMAP.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize_int8(v: jnp.ndarray, amax: jnp.ndarray):
+    """Shared-scale int8 quantization; returns (codes int8-valued, scale)."""
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(v / scale), -127, 127)
+    return q, scale
+
+
+def _compressed_psum_flat(v: jnp.ndarray, axis: str, n: int) -> jnp.ndarray:
+    """Mean-reduce ``v`` over mesh axis ``axis`` with int8 payloads.
+
+    Runs inside ``shard_map``: ``v`` is this device's local gradient.
+    All devices return the identical reduced value (the scale is agreed
+    via pmax before anything is rounded).
+    """
+    amax = jax.lax.pmax(jnp.max(jnp.abs(v)), axis)
+    q, scale = _quantize_int8(v, amax)
+    total = jax.lax.psum(q.astype(jnp.int32), axis)
+    return total.astype(jnp.float32) * scale / n
+
+
+def make_compressed_allreduce(mesh, axis: str):
+    """grad_transform for ``make_train_step``: int8-compressed DP reduce.
+
+    Returns ``fn(grads) -> grads``. Under GSPMD jit the sum over ``axis``
+    is already inserted by XLA when the batch is sharded; this transform
+    rounds the reduced gradient onto the int8 grid so the optimizer
+    consumes values the wire format can represent (one rounding of the
+    mean — an approximation of the per-device-rounded wire path; see
+    module docstring).
+    """
+    n = mesh.shape.get(axis, 1)
+
+    def transform(grads: Any) -> Any:
+        if n <= 1:
+            return grads
+
+        def one(g):
+            q, scale = _quantize_int8(g, jnp.max(jnp.abs(g)))
+            return q * scale
+
+        return jax.tree.map(one, grads)
+
+    return transform
+
+
+class ErrorFeedback:
+    """Residual carry for compressed reduction: time-averaged exactness."""
+
+    @staticmethod
+    def init(grads: Any) -> Any:
+        return jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+    @staticmethod
+    def apply(grads: Any, residual: Any) -> tuple:
+        """(sent, new_residual): sent = Q(g + r), r' = g + r - sent."""
+        def one(g, r):
+            e = g.astype(jnp.float32) + r
+            q, scale = _quantize_int8(e, jnp.max(jnp.abs(e)))
+            sent = q * scale
+            return sent, e - sent
+
+        pairs = jax.tree.map(one, grads, residual)
+        is_pair = lambda x: isinstance(x, tuple) and len(x) == 2 \
+            and not hasattr(x, "_fields")
+        sent = jax.tree.map(lambda p: p[0], pairs, is_leaf=is_pair)
+        new_res = jax.tree.map(lambda p: p[1], pairs, is_leaf=is_pair)
+        return sent, new_res

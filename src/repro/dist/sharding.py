@@ -1,0 +1,214 @@
+"""Logical-axis sharding rules: one table from model axes to mesh axes.
+
+Every parameter/activation/cache leaf in the repo is annotated with
+*logical* axis names (``lm.param_axes``, :func:`batch_axes`,
+:func:`cache_axes`, ``core.compress.delta_axes``). This module owns the
+single mapping from those names to physical mesh axes, so the whole
+layout of a deployment is one small dict:
+
+* base weights are **tensor-parallel** along the matmul output /
+  contraction axes per layer type — attention q/kv heads, MLP up/down,
+  MoE experts, SSM inner and RG-LRU width all map to ``model``;
+* ``batch`` maps to ``(pod, data)`` — whichever of those axes the mesh
+  actually has;
+* everything else (norms, layer stacks, scalar quant params) replicates.
+
+Divisibility is checked per leaf: an axis whose size the mesh axis does
+not divide falls back to replicated, and the fallback is *recorded* in
+``ShardingRules.fallbacks`` so dry-runs and tests can assert the layout
+they think they asked for is the one they got.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.utils import map_with_paths
+
+# Default (serving) profile: pure tensor parallelism over `model`; the
+# embedding/residual dim stays replicated so activations never need a
+# gather between layers the compiler didn't choose itself.
+DEFAULT_RULES: dict[Optional[str], tuple] = {
+    "batch": ("pod", "data"),
+    "seq": (),
+    "vocab": ("model",),
+    "embed": (),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "expert_ff": ("model",),
+    "inner": ("model",),
+    "lru": ("model",),
+    "layers": (),
+}
+
+# Training: FSDP — additionally shard the (large, otherwise replicated)
+# embedding/residual dim of every weight over the data axis.
+TRAIN_OVERRIDES = dict(embed=("data",))
+
+# Serving keeps the default pure-TP layout (explicit so launchers can say
+# which profile they mean).
+SERVE_OVERRIDES: dict[str, tuple] = {}
+
+# 500k-token decode: batch=1, the KV ring is the footprint — spread the
+# sequence axis of the cache over the (otherwise idle) data axis.
+LONG_CONTEXT_OVERRIDES = dict(seq=("data",), batch=())
+
+
+class ShardingRules:
+    """Maps logical axis tuples to :class:`PartitionSpec`, with fallbacks.
+
+    ``rules`` maps logical axis name -> candidate mesh axes, tried in
+    order; a candidate is used when the mesh has it, the spec has not
+    used it yet, and it divides the dimension. Several candidates can
+    stack on one dimension (``batch`` over ``(pod, data)``).
+    """
+
+    def __init__(self, mesh, rules: Optional[dict] = None):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES) if rules is None else dict(rules)
+        self.fallbacks: list[tuple] = []   # (leaf path, logical axes, shape)
+
+    def with_overrides(self, **overrides) -> "ShardingRules":
+        return ShardingRules(self.mesh, {**self.rules, **overrides})
+
+    def spec_for(self, axes: tuple, shape: tuple, path: str = "?") -> P:
+        """PartitionSpec for one leaf; records a fallback when a mapped
+        logical axis exists but no mesh axis fits (divisibility/reuse)."""
+        assert len(axes) == len(shape), (path, axes, shape)
+        used: set = set()
+        entries = []
+        fell_back = False
+        for name, dim in zip(axes, shape):
+            cands = self.rules.get(name, ()) if name is not None else ()
+            avail = [a for a in cands if a in self.mesh.shape and a not in used]
+            picked: list = []
+            span = 1
+            for a in avail:
+                sz = self.mesh.shape[a]
+                if dim % (span * sz) == 0:
+                    picked.append(a)
+                    span *= sz
+            if avail and not picked:
+                fell_back = True
+            used.update(picked)
+            if not picked:
+                entries.append(None)
+            elif len(picked) == 1:
+                entries.append(picked[0])
+            else:
+                entries.append(tuple(picked))
+        if fell_back:
+            self.fallbacks.append((path, tuple(axes), tuple(shape)))
+        return P(*entries)
+
+
+def tree_shardings(rules: ShardingRules, specs: Any, axes: Any) -> Any:
+    """NamedSharding tree for a (specs, logical-axes) tree pair.
+
+    ``specs`` leaves are arrays/ShapeDtypeStructs; ``axes`` mirrors the
+    structure with a tuple of logical names (len == ndim) at each leaf
+    position. ``None`` sub-trees (uncompressed delta slots) map to None.
+    """
+    def fn(path, leaf, ax):
+        return NamedSharding(rules.mesh,
+                             rules.spec_for(tuple(ax), tuple(leaf.shape), path))
+    return map_with_paths(fn, specs, axes)
+
+
+def zero1_shardings(rules: ShardingRules, specs: Any, axes: Any,
+                    zero_axes: tuple = ("data",)) -> Any:
+    """Optimizer-state shardings: base layout + ZeRO-1 partitioning.
+
+    Each leaf starts from the parameter's own spec; every ``zero_axes``
+    mesh axis not already used is then added on the first still-
+    replicated, divisible dimension, so optimizer moments shard over the
+    data(-parallel) axis without ever double-using a mesh axis.
+    """
+    def fn(path, leaf, ax):
+        spec = list(rules.spec_for(tuple(ax), tuple(leaf.shape), path))
+        spec += [None] * (len(leaf.shape) - len(spec))
+        used = {a for e in spec if e is not None
+                for a in (e if isinstance(e, tuple) else (e,))}
+        for z in zero_axes:
+            if z not in rules.mesh.shape or z in used:
+                continue
+            sz = rules.mesh.shape[z]
+            for i, (e, dim) in enumerate(zip(spec, leaf.shape)):
+                if e is None and dim % sz == 0:
+                    spec[i] = z
+                    used.add(z)
+                    break
+        return NamedSharding(rules.mesh, P(*spec))
+    return map_with_paths(fn, specs, axes)
+
+
+# ---------------------------------------------------------------------------
+# Logical axes for non-parameter trees
+# ---------------------------------------------------------------------------
+_BATCH_AXES_BY_NAME = {
+    "tokens": ("batch", "seq"),
+    "positions": ("batch", "seq"),
+    "labels": ("batch", "seq"),
+    "loss_mask": ("batch", "seq"),
+    "enc_feats": ("batch", "seq", "embed"),
+    "image_embeds": ("batch", "seq", "embed"),
+}
+
+
+def batch_axes(batch_specs: dict) -> dict:
+    """Logical axes for a model-input batch dict."""
+    out = {}
+    for k, v in batch_specs.items():
+        ax = _BATCH_AXES_BY_NAME.get(k)
+        if ax is None or len(ax) != len(v.shape):
+            ax = ("batch",) + (None,) * (len(v.shape) - 1)
+        out[k] = ax
+    return out
+
+
+_CACHE_AXES_BY_NAME = {
+    # attention KV ring + per-row slot positions
+    "k": ("batch", "seq", "kv_heads", None),
+    "v": ("batch", "seq", "kv_heads", None),
+    "pos": ("batch", "seq"),
+    # ssm state (conv tails + expanded state)
+    "conv_x": ("batch", None, "inner"),
+    "conv_bc": ("batch", None, None),
+    "state": ("batch", None, None, None),
+    # rg-lru state
+    "conv": ("batch", None, "lru"),
+    "h": ("batch", "lru"),
+}
+
+
+def cache_axes(cache: Any) -> Any:
+    """Logical-axes tree matching ``lm.cache_specs`` structure.
+
+    Every cache leaf leads with the batch(slot) dim; KV rings shard
+    along kv-heads, ssm/rglru states along their inner width. NamedTuple
+    states are rebuilt as NamedTuples of axis tuples so the result pairs
+    with the cache under ``tree_shardings``.
+    """
+    def leaf_axes(name: str, leaf) -> tuple:
+        ax = _CACHE_AXES_BY_NAME.get(name)
+        nd = len(leaf.shape)
+        if ax is None or len(ax) != nd:
+            ax = ("batch",) + (None,) * (nd - 1)
+        return ax
+
+    def rec(node, name=""):
+        if isinstance(node, dict):
+            return {k: rec(v, k) for k, v in node.items()}
+        if hasattr(node, "_fields"):          # NamedTuple state
+            return type(node)(**{f: rec(getattr(node, f), f)
+                                 for f in node._fields})
+        if isinstance(node, (list, tuple)):
+            return type(node)(rec(v, name) for v in node)
+        return leaf_axes(name, node)
+
+    return rec(cache)

@@ -4,6 +4,13 @@ Handle envelope checks (tile divisibility, supported h_g/keep), input
 prep (padding, scalar shaping) and the interpret-mode switch used for
 CPU validation. Outside the kernel envelope the XLA fallback
 (reconstruct-then-matmul) is used — mathematically identical.
+
+Multi-device: :func:`delta_correction_sharded` partitions the packed
+delta along its output-column axis over the mesh ``model`` axis with
+``shard_map``, so each shard dequantizes only its h_out/n columns —
+the kernel's compressed-bytes-only HBM traffic is preserved per shard
+and the correction needs no collectives (x is replicated at decode
+batch sizes; each output column is produced by exactly one shard).
 """
 from __future__ import annotations
 
@@ -13,6 +20,8 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core.pack import PackedDelta, reconstruct_dense
 from repro.kernels import delta_spmm as _k
@@ -85,6 +94,61 @@ def delta_spmm_slots(x: jnp.ndarray, d: PackedDelta, *, tb: int = 128,
         return jnp.einsum("b...d,bdf->b...f", x, dense)
     fn = lambda xb, db: delta_spmm(xb, db, tb=tb, ob=ob, interpret=False)
     return jax.vmap(fn)(x, d)
+
+
+def delta_correction_sharded(x: jnp.ndarray, d: PackedDelta, mesh, *,
+                             use_pallas: bool = False,
+                             interpret: Optional[bool] = None,
+                             tb: int = 128, ob: int = 128) -> Optional[jnp.ndarray]:
+    """y = x · dequant(d), with d partitioned along output columns.
+
+    ``d`` is either a shared delta (no stack) or a row-gathered stack
+    ``[B]`` matching ``x``'s leading dim (mixed-tenant decode). The
+    shard_map body computes its own h_out/n_model column slice with the
+    exact same local math as the single-device path (Pallas kernel when
+    ``use_pallas``, reconstruct-then-matmul otherwise), so sharded
+    serving is bit-identical to the replicated engine.
+
+    Returns None when the mesh/delta layout does not apply (no model
+    axis, h_out not divisible, unsupported stack shape) — the caller
+    falls back to the replicated path.
+    """
+    n = mesh.shape.get("model", 1) if mesh is not None else 1
+    if n <= 1 or d.h_out % n:
+        return None
+    stack = d.stack_shape()
+    if stack not in ((), (x.shape[0],)):
+        return None
+    scale = jnp.asarray(d.scale, jnp.float32)
+    zero = jnp.asarray(d.zero, jnp.int32)
+
+    def last_model(nd: int) -> P:
+        return P(*([None] * (nd - 1) + ["model"]))
+
+    def repl(nd: int) -> P:
+        return P(*([None] * nd))
+
+    def body(xb, idx, codes, s, z):
+        # local O-slice delta: static meta rebuilt with the shard's h_out
+        dl = PackedDelta(idx, codes, s, z, d.h_in, idx.shape[-1], d.h_g,
+                         d.keep, d.alpha, d.k_bits, d.m)
+        if stack:
+            if use_pallas:
+                return delta_spmm_slots(xb, dl, tb=tb, ob=ob,
+                                        interpret=interpret)
+            dense = reconstruct_dense(dl, dtype=xb.dtype)
+            return jnp.einsum("b...d,bdf->b...f", xb, dense)
+        if use_pallas:
+            return delta_spmm(xb, dl, tb=tb, ob=ob, interpret=interpret)
+        return xb @ reconstruct_dense(dl, dtype=xb.dtype)
+
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(repl(x.ndim), last_model(d.idx.ndim),
+                             last_model(d.codes.ndim), repl(scale.ndim),
+                             repl(zero.ndim)),
+                   out_specs=last_model(x.ndim),
+                   check_rep=False)
+    return fn(x, d.idx, d.codes, scale, zero)
 
 
 def fused_base_delta(x: jnp.ndarray, w: jnp.ndarray, d: PackedDelta, *,

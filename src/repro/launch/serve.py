@@ -7,6 +7,13 @@ process, now with slot-level scheduling and per-tenant metrics.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
         --tenants 3 --ratio 128 --requests 12 --slots 8
+
+Multi-device (tensor-parallel base + replicated packed deltas; on CPU
+the devices are faked, which is exactly how the CI multi-device job
+runs it):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+        python -m repro.launch.serve --tenants 2 --requests 4 --devices 8
 """
 import argparse
 import json
@@ -56,30 +63,77 @@ def main():
                     help="seconds between request arrivals (staggered stream)")
     ap.add_argument("--json", action="store_true",
                     help="print the metrics report as JSON")
+    ap.add_argument("--print-tokens", action="store_true",
+                    help="print every request's generated tokens (for "
+                         "inspection; cross-process diffs are not stable — "
+                         "use --check-identity for the identity contract)")
+    ap.add_argument("--check-identity", action="store_true",
+                    help="with --devices N>1: also serve the same stream on "
+                         "a single-device engine in this process and fail "
+                         "unless every request's tokens match exactly")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="shard the base model over N devices ((1, N) mesh; "
+                         "on CPU set XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N before launch)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
+    mesh = None
+    if args.devices > 1:
+        from repro.launch.mesh import make_serving_mesh
+        mesh = make_serving_mesh(args.devices)
+        print(f"mesh: {dict(mesh.shape)}", flush=True)
     rng = jax.random.PRNGKey(0)
     base = lm.init_params(cfg, rng)
-    eng = ContinuousEngine(cfg, base, n_slots=args.slots, max_seq=args.max_seq)
+    tenants = synth_tenants(cfg, base, args.tenants, RATIO_SPECS[args.ratio],
+                            rng)
 
-    for name, deltas, report in synth_tenants(cfg, base, args.tenants,
-                                              RATIO_SPECS[args.ratio], rng):
-        eng.register_tenant(name, deltas, report)
+    def serve_stream(mesh_):
+        eng_ = ContinuousEngine(cfg, base, n_slots=args.slots,
+                                max_seq=args.max_seq, mesh=mesh_)
+        for name, deltas, report in tenants:
+            eng_.register_tenant(name, deltas, report)
+        reqs_ = []
+        for i in range(args.requests):
+            tenant = f"tenant{i % args.tenants}"
+            L = 4 + (i % 3) * 4     # mixed prompt lengths -> multiple buckets
+            prompt = np.asarray(jax.random.randint(
+                jax.random.fold_in(rng, 100 + i), (L,), 0, cfg.vocab))
+            reqs_.append(eng_.submit(tenant, prompt,
+                                     max_new_tokens=args.max_new,
+                                     arrival=i * args.arrival_gap))
+        metrics_ = eng_.run()
+        assert all(r.done for r in reqs_)
+        return eng_, reqs_, metrics_
+
+    ref_reqs = None
+    if args.check_identity:
+        if mesh is None:
+            raise SystemExit("--check-identity requires --devices N > 1 "
+                             "(nothing to compare against otherwise)")
+        # single-device reference FIRST (its jits trace without the mesh)
+        _, ref_reqs, _ = serve_stream(None)
+
+    for name, _, report in tenants:
         print(f"registered {name}: {report.summary()}", flush=True)
-
-    reqs = []
-    for i in range(args.requests):
-        tenant = f"tenant{i % args.tenants}"
-        L = 4 + (i % 3) * 4     # mixed prompt lengths -> multiple buckets
-        prompt = np.asarray(jax.random.randint(
-            jax.random.fold_in(rng, 100 + i), (L,), 0, cfg.vocab))
-        reqs.append(eng.submit(tenant, prompt, max_new_tokens=args.max_new,
-                               arrival=i * args.arrival_gap))
-
-    metrics = eng.run()
+    eng, reqs, metrics = serve_stream(mesh)
     rep = metrics.report()
-    assert all(r.done for r in reqs)
+
+    if ref_reqs is not None:
+        bad = [r.rid for r, s in zip(reqs, ref_reqs)
+               if not np.array_equal(r.output(), s.output())]
+        if bad:
+            raise SystemExit(f"token identity FAILED for requests {bad}")
+        print(f"token identity vs single device: OK "
+              f"({len(reqs)} requests)", flush=True)
+
+    if args.print_tokens:
+        # per-request token dump for inspection. Do NOT diff these across
+        # separate process runs — CPU XLA is not bit-deterministic across
+        # processes (serve/README.md); the identity contract is checked
+        # in-process by --check-identity, which is what CI runs.
+        for r in reqs:
+            print(f"tokens {r.rid} {r.tenant}: {' '.join(map(str, r.output()))}")
 
     if args.json:
         print(json.dumps(rep, indent=2))

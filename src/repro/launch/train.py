@@ -74,7 +74,10 @@ def main():
     with mesh:
         params = jax.tree.map(lambda a, s: jax.device_put(a, s),
                               lm.init_params(cfg, jax.random.PRNGKey(0)), p_sh)
-        opt = adamw.init(params)
+        # moments/master inherit the param layout at init; re-place them on
+        # the ZeRO-1 layout (data-sharded free dims) the jit expects
+        opt = jax.tree.map(lambda a, s: jax.device_put(a, s),
+                           adamw.init(params), o_sh)
         start = 0
         ck = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
         if args.resume and ck and ck.latest_step() is not None:
@@ -83,7 +86,10 @@ def main():
             params, opt, start = state["params"], state["opt"], man["extra"]["data_step"]
             print(f"resumed from step {start}")
 
-        jf = jax.jit(step_fn, in_shardings=(p_sh, o_sh, None, None))
+        # pin outputs too: params/opt must round-trip on their layouts, or
+        # step i+1 sees different committed shardings than step i
+        jf = jax.jit(step_fn, in_shardings=(p_sh, o_sh, None, None),
+                     out_shardings=(p_sh, o_sh, None))
         t0 = time.time()
         tokens = 0
         for i in range(start, args.steps):

@@ -133,16 +133,40 @@ class ContinuousEngine:
     jit shape budget: one decode shape (fixed ``n_slots``), one prefill
     shape per length bucket, one cache-insert shape. Mixed tenants share
     all of them.
+
+    ``mesh=`` (a ``(data, model)`` mesh from
+    ``launch.mesh.make_serving_mesh``) serves the same loop sharded:
+    base weights column-parallel over ``model``, KV rings along
+    kv-heads, packed deltas replicated, delta corrections shard_map'd
+    per output-column slice — token-identical to the unsharded engine
+    (serve/README.md §Mesh serving). Engines with different meshes (or
+    none) can coexist in one process; each installs its own mesh before
+    stepping.
     """
 
     def __init__(self, cfg: ArchConfig, base_params: Any, *,
                  n_slots: int = 8, max_seq: int = 256, min_bucket: int = 8,
-                 store: Optional[DeltaStore] = None, clock=time.monotonic):
+                 store: Optional[DeltaStore] = None, clock=time.monotonic,
+                 mesh=None):
         if cfg.family in ("encdec", "vlm"):
             raise ValueError(
                 f"continuous batching does not support family={cfg.family!r} "
                 "(per-request encoder inputs); use Engine.generate")
         self.cfg = cfg
+        self.mesh = mesh
+        cache_sh = None
+        if mesh is not None:
+            # Sharded serving: base weights tensor-parallel over `model`,
+            # KV rings along kv-heads, packed deltas replicated; the delta
+            # correction runs shard_map'd per output-column slice
+            # (core.apply mesh mode; re-installed per step by
+            # _install_mesh so mesh and plain engines can coexist).
+            from repro.core.apply import set_mesh
+            from repro.launch import mesh as mesh_lib
+            self._param_sh = mesh_lib.param_shardings(cfg, mesh)
+            base_params = mesh_lib.shard_tree(base_params, self._param_sh)
+            cache_sh = mesh_lib.cache_shardings(cfg, mesh, n_slots, max_seq)
+            set_mesh(mesh)
         self.base = base_params
         self.n_slots = n_slots
         self.max_seq = max_seq
@@ -154,7 +178,7 @@ class ContinuousEngine:
                                      max_bucket=max_seq, exact=exact)
         self.queue = RequestQueue()
         self.sched = Scheduler(n_slots, self.buckets)
-        self.kv = SlotKVCache(cfg, n_slots, max_seq)
+        self.kv = SlotKVCache(cfg, n_slots, max_seq, shardings=cache_sh)
         self.metrics = Metrics(n_slots)
         self.clock = clock
 
@@ -177,8 +201,15 @@ class ContinuousEngine:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32), c
 
         # donate the cache: the decode step updates the (dominant) KV
-        # allocation in place instead of copying it every token
-        self._decode = jax.jit(_step, donate_argnums=(1,))
+        # allocation in place instead of copying it every token. In mesh
+        # mode, pin the outputs (tokens replicated, cache on its layout)
+        # so the donated buffers round-trip without resharding.
+        jit_kw = {}
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            jit_kw["out_shardings"] = (
+                NamedSharding(mesh, PartitionSpec()), cache_sh)
+        self._decode = jax.jit(_step, donate_argnums=(1,), **jit_kw)
         self.prefill_shapes: set = set()
 
     # -- tenants ------------------------------------------------------------
@@ -194,6 +225,9 @@ class ContinuousEngine:
         except ValueError:
             self.store.unregister(name)
             raise
+        if self.mesh is not None:
+            from repro.launch.mesh import replicate
+            t.deltas = replicate(t.deltas, self.mesh)
         return t
 
     def _refresh_stacked(self) -> None:
@@ -218,6 +252,12 @@ class ContinuousEngine:
             self._stacked = stack_tenant_deltas(
                 [self._zero_tree] + [t.deltas for t in tenants])
             self._rows = {t.name: i + 1 for i, t in enumerate(tenants)}
+            if self.mesh is not None:
+                # compressed deltas are tiny: replicate them across the
+                # mesh once, at registration, not on every decode step
+                from repro.launch.mesh import replicate
+                self._stacked = replicate(self._stacked, self.mesh)
+                self._zero_tree = replicate(self._zero_tree, self.mesh)
         # registration is append-only so rows never shift — but a live
         # unregister would remap rows under in-flight sequences, silently
         # decoding them with another tenant's delta. Refuse instead.
@@ -259,7 +299,16 @@ class ContinuousEngine:
             self._t0 = self.clock()
         return self.clock() - self._t0
 
+    def _install_mesh(self) -> None:
+        """Install THIS engine's mesh (or None) as the process-global
+        apply-mode before any call that may trace — engines with and
+        without a mesh can then coexist in one process (each jit traces
+        at most once per shape, under its owner's mesh)."""
+        from repro.core.apply import set_mesh
+        set_mesh(self.mesh)
+
     def _prefill_into(self, slot: int, req: Request, now: float) -> None:
+        self._install_mesh()
         self._refresh_stacked()
         L = req.prompt_len
         bucket = self.buckets.bucket(L)
@@ -307,6 +356,7 @@ class ContinuousEngine:
         active = self.sched.active_slots()
         if not active:
             return
+        self._install_mesh()
         self._refresh_stacked()
         sd = None
         if self._stacked is not None:

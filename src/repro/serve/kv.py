@@ -12,7 +12,7 @@ RG-LRU conv/h, and cross-attention memories all slice per row.
 """
 from __future__ import annotations
 
-from typing import Any, List
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,17 +22,31 @@ from repro.models import lm
 
 
 class SlotKVCache:
-    """Fixed-slot device cache with mid-flight row insertion."""
+    """Fixed-slot device cache with mid-flight row insertion.
+
+    ``shardings`` (optional NamedSharding tree matching
+    ``lm.cache_specs``, e.g. from ``launch.mesh.cache_shardings``) pins
+    the persistent cache to a mesh layout — KV rings sharded along
+    kv-heads, slot rows along ``data`` — and every insert/update is
+    forced back onto it via ``out_shardings`` so mid-flight row writes
+    never drift the layout.
+    """
 
     def __init__(self, cfg: ArchConfig, n_slots: int, max_seq: int,
-                 enc_len: int = 0):
+                 enc_len: int = 0, shardings: Optional[Any] = None):
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_seq = max_seq
-        self.cache: Any = lm.init_cache(cfg, n_slots, max_seq, enc_len=enc_len)
+        self.shardings = shardings
+        cache = lm.init_cache(cfg, n_slots, max_seq, enc_len=enc_len)
+        if shardings is not None:
+            from repro.launch.mesh import shard_tree
+            cache = shard_tree(cache, shardings)
+        self.cache: Any = cache
         self._free: List[int] = list(range(n_slots))
         # donate the old cache buffers: insertion is an in-place row write
-        self._insert = jax.jit(self._insert_impl, donate_argnums=0)
+        jit_kw = {} if shardings is None else {"out_shardings": shardings}
+        self._insert = jax.jit(self._insert_impl, donate_argnums=0, **jit_kw)
 
     @staticmethod
     def _insert_impl(cache, row_cache, slot):

@@ -66,6 +66,7 @@ def test_latest_step_and_multiple(tmp_path):
     assert float(r1["x"][0]) == 1.0
 
 
+@pytest.mark.slow  # three short training runs across meshes in subprocesses
 def test_elastic_remesh_restore(subproc):
     """Save on a (2,2) mesh, restore on (4,1) AND on (1,1): training continues
     with identical loss trajectory — the elastic-rescale path."""

@@ -1,0 +1,354 @@
+"""Sharded multi-device serving: layouts, shard_map delta path, identity.
+
+Everything runs on CPU with fake devices
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8`` via the
+``subproc`` fixture) — the same way the CI multi-device job runs it.
+"""
+import numpy as np
+import pytest
+
+
+def test_serve_param_shardings_column_parallel(subproc):
+    """Serve layout: matmul weights shard their output axis over `model`;
+    embeddings, norms and conv taps replicate; indivisible dims fall back."""
+    out = subproc("""
+    import jax
+    from jax.sharding import PartitionSpec as P
+    from repro.configs import get_smoke_config
+    from repro.launch.mesh import make_serving_mesh, param_shardings
+
+    mesh = make_serving_mesh(8)
+    cfg = get_smoke_config('llama3.2-1b')
+    sh = param_shardings(cfg, mesh)
+    # attn wq [L, d, q_dim=64]: output columns sharded
+    assert sh['attn']['wq'].spec == P(None, None, 'model'), sh['attn']['wq'].spec
+    assert sh['attn']['wo'].spec == P(None, None, 'model')
+    assert sh['mlp']['wi'].spec == P(None, None, 'model')
+    # contraction axes never sharded; embeddings/norms replicated
+    assert sh['embed']['tok'].spec == P()
+    assert sh['attn']['ln1'].spec == P()
+
+    # ssm arch: inner projections sharded, conv taps replicated
+    cfg2 = get_smoke_config('mamba2-370m')
+    sh2 = param_shardings(cfg2, mesh)
+    assert sh2['ssm']['conv_x_w'].spec == P()
+    assert sh2['ssm']['wx'].spec[-1] in ('model', None)
+    print('OK')
+    """, n_devices=8)
+    assert "OK" in out
+
+
+def test_delta_shardings_replicated_and_output_sharded(subproc):
+    out = subproc("""
+    import jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.configs import get_smoke_config
+    from repro.core import DeltaDQSpec, compress
+    from repro.core.pack import PackedDelta
+    from repro.launch.mesh import make_serving_mesh, delta_shardings
+    from repro.models import lm
+
+    cfg = get_smoke_config('llama3.2-1b')
+    rng = jax.random.PRNGKey(0)
+    base = lm.init_params(cfg, rng)
+    ft = jax.tree.map(lambda p: p * 1.01 if p.ndim >= 2 else p, base)
+    deltas, _ = compress(base, ft, DeltaDQSpec(alpha=8.0, k_bits=4, m=8, h_g=16))
+    mesh = make_serving_mesh(8)
+
+    repl = delta_shardings(deltas, mesh)
+    leaf = repl['attn']['wq']
+    assert leaf.idx.spec == P() and leaf.scale.spec == P()
+
+    shard = delta_shardings(deltas, mesh, shard_output=True)
+    leaf = shard['attn']['wq']          # idx [L, G, K, O]: O on model
+    assert leaf.idx.spec == P(None, None, None, 'model'), leaf.idx.spec
+    assert leaf.scale.spec == P()
+    print('OK')
+    """, n_devices=8)
+    assert "OK" in out
+
+
+def test_sharded_delta_correction_bit_identical(subproc):
+    """The shard_map'd output-column-partitioned correction must be
+    bit-identical to the replicated fallback, for both the shared-delta
+    and the row-gathered (slot) stack cases."""
+    out = subproc("""
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.configs import get_smoke_config
+    from repro.core import DeltaDQSpec, compress
+    from repro.core.pack import reconstruct_dense
+    from repro.kernels import ops
+    from repro.launch.mesh import make_serving_mesh
+    from repro.models import lm
+
+    cfg = get_smoke_config('llama3.2-1b')
+    rng = jax.random.PRNGKey(0)
+    base = lm.init_params(cfg, rng)
+    ft = jax.tree.map(lambda p: p + 0.02 * jax.random.normal(
+        jax.random.fold_in(rng, 7), p.shape, jnp.float32).astype(p.dtype)
+        if p.ndim >= 2 else p, base)
+    deltas, _ = compress(base, ft, DeltaDQSpec(alpha=8.0, k_bits=4, m=8, h_g=16))
+    mesh = make_serving_mesh(8)
+    d = deltas['attn']['wq'].index(0)
+
+    for dt in (jnp.float32, jnp.bfloat16):
+        x = (jax.random.normal(jax.random.PRNGKey(1), (2, 3, d.h_in)) * 0.1).astype(dt)
+        ref = jax.jit(lambda x: x @ reconstruct_dense(d, dtype=x.dtype))(x)
+        got = jax.jit(lambda x: ops.delta_correction_sharded(
+            x, d, mesh, use_pallas=False))(x)
+        assert (np.asarray(ref) == np.asarray(got)).all(), dt
+
+    # row-gathered stack: one tenant delta per batch row
+    import jax.numpy as jnp
+    B = 4
+    stack = jax.tree.map(lambda a: jnp.stack([a] * B), (d.idx, d.codes))
+    from repro.core.pack import PackedDelta
+    ds = PackedDelta(stack[0], stack[1],
+                     jnp.full((B,), jnp.float32(d.scale)),
+                     jnp.full((B,), jnp.int32(d.zero)),
+                     d.h_in, d.h_out, d.h_g, d.keep, d.alpha, d.k_bits, d.m)
+    xb = (jax.random.normal(jax.random.PRNGKey(2), (B, 1, d.h_in)) * 0.1
+          ).astype(jnp.bfloat16)
+    ref = jax.jit(lambda x: jnp.einsum(
+        'b...d,bdf->b...f', x, reconstruct_dense(ds, dtype=x.dtype)))(xb)
+    got = jax.jit(lambda x: ops.delta_correction_sharded(
+        x, ds, mesh, use_pallas=False))(xb)
+    assert (np.asarray(ref) == np.asarray(got)).all()
+
+    # indivisible output or foreign stack -> caller must fall back
+    assert ops.delta_correction_sharded(xb[:3], ds, mesh) is None  # B mismatch
+    print('OK')
+    """, n_devices=8)
+    assert "OK" in out
+
+
+@pytest.mark.slow  # two full engine streams in a subprocess
+def test_sharded_engine_token_identity_mixed_stream(subproc):
+    """Sharded decode == single-device ContinuousEngine, token for token:
+    3 tenants + raw-base requests (packed-delta dispatch AND the dense
+    zero-delta fallback row), mixed lengths, staggered arrivals."""
+    out = subproc("""
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.configs import get_smoke_config
+    from repro.launch.mesh import make_serving_mesh
+    from repro.launch.serve import RATIO_SPECS, synth_tenants
+    from repro.models import lm
+    from repro.serve import ContinuousEngine
+    from repro.serve.scheduler import VirtualClock
+
+    cfg = get_smoke_config('llama3.2-1b')
+    rng = jax.random.PRNGKey(0)
+    base = lm.init_params(cfg, rng)
+    tenants = synth_tenants(cfg, base, 3, RATIO_SPECS[128], rng)
+
+    def run(mesh):
+        eng = ContinuousEngine(cfg, base, n_slots=4, max_seq=64,
+                               clock=VirtualClock(tick=0.01), mesh=mesh)
+        for name, deltas, rep in tenants:
+            eng.register_tenant(name, deltas, rep)
+        reqs = []
+        for i in range(9):
+            L = 4 + (i % 3) * 4
+            tenant = None if i % 4 == 3 else f'tenant{i % 3}'
+            prompt = np.asarray(jax.random.randint(
+                jax.random.fold_in(rng, 100 + i), (L,), 0, cfg.vocab))
+            reqs.append(eng.submit(tenant, prompt, max_new_tokens=8,
+                                   arrival=i * 0.05))
+        eng.run()
+        assert all(r.done for r in reqs)
+        return eng, [r.output() for r in reqs]
+
+    _, ref = run(None)                       # single-device first
+    eng, got = run(make_serving_mesh(8))
+    for i, (a, b) in enumerate(zip(ref, got)):
+        assert (a == b).all(), (i, a.tolist(), b.tolist())
+
+    # the sharded engine really holds a sharded base
+    wq = eng.base['attn']['wq']
+    assert len(wq.sharding.device_set) == 8
+    assert wq.sharding.spec[-1] == 'model'
+    print('OK')
+    """, n_devices=8)
+    assert "OK" in out
+
+
+def test_kv_cache_insert_evict_roundtrip_sharded(subproc):
+    """Slot insert/release round-trips under a sharded cache layout: the
+    inserted row reads back exactly, other rows are untouched, and the
+    persistent cache keeps its NamedSharding across insert and decode."""
+    out = subproc("""
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.configs import get_smoke_config
+    from repro.launch.mesh import cache_shardings, make_serving_mesh
+    from repro.models import lm
+    from repro.serve.kv import SlotKVCache
+
+    cfg = get_smoke_config('llama3.2-1b')
+    # model=2 so n_kv=2 KV rings actually shard along the heads axis
+    mesh = make_serving_mesh(8, data=4)
+    csh = cache_shardings(cfg, mesh, 4, 16)
+    assert any(s.spec[2] == 'model' for s in jax.tree.leaves(csh)
+               if hasattr(s, 'spec') and len(s.spec) == 4)
+
+    kv = SlotKVCache(cfg, 4, 16, shardings=csh)
+    before = jax.tree.map(np.asarray, kv.cache)
+
+    def row(seed):
+        rc = lm.init_cache(cfg, 1, 16)
+        return jax.tree.map(
+            lambda a: (a + seed).astype(a.dtype)
+            if jnp.issubdtype(a.dtype, jnp.floating) else a, rc)
+
+    kv.claim(1)
+    kv.insert(1, row(1.0))
+    after = jax.tree.map(np.asarray, kv.cache)
+    for b, a in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+        assert (b[0] == a[0]).all() and (b[2:] == a[2:]).all()  # untouched
+    got = jax.tree.leaves(after)[0][1]
+    want = np.asarray(jax.tree.leaves(row(1.0))[0][0], got.dtype)
+    assert (got == want).all()
+
+    # release + reinsert a different row: old row data fully overwritten
+    kv.release(1)
+    kv.claim(1)
+    kv.insert(1, row(2.0))
+    again = jax.tree.map(np.asarray, kv.cache)
+    got2 = jax.tree.leaves(again)[0][1]
+    want2 = np.asarray(jax.tree.leaves(row(2.0))[0][0], got2.dtype)
+    assert (got2 == want2).all()
+
+    # layout survives the donated in-place update
+    for leaf, s in zip(jax.tree.leaves(kv.cache), jax.tree.leaves(csh)):
+        assert leaf.sharding == s, (leaf.sharding, s)
+    assert kv.n_free == 3
+    print('OK')
+    """, n_devices=8)
+    assert "OK" in out
+
+
+def test_mesh_and_plain_engines_coexist(subproc):
+    """A plain engine built AFTER a mesh engine must not inherit the
+    mesh: each engine installs its own apply-mode before stepping, so
+    the reverse construction order still compares sharded vs truly
+    single-device (regression: stale process-global mesh)."""
+    out = subproc("""
+    import numpy as np, jax
+    from repro.configs import get_smoke_config
+    from repro.core import apply as ap
+    from repro.launch.mesh import make_serving_mesh
+    from repro.launch.serve import RATIO_SPECS, synth_tenants
+    from repro.models import lm
+    from repro.serve import ContinuousEngine
+    from repro.serve.scheduler import VirtualClock
+
+    cfg = get_smoke_config('llama3.2-1b')
+    rng = jax.random.PRNGKey(0)
+    base = lm.init_params(cfg, rng)
+    tenants = synth_tenants(cfg, base, 2, RATIO_SPECS[128], rng)
+
+    def run(mesh):
+        eng = ContinuousEngine(cfg, base, n_slots=2, max_seq=64,
+                               clock=VirtualClock(tick=0.01), mesh=mesh)
+        for name, deltas, rep in tenants:
+            eng.register_tenant(name, deltas, rep)
+        reqs = [eng.submit(f'tenant{i % 2}',
+                           np.asarray(jax.random.randint(
+                               jax.random.fold_in(rng, 40 + i), (6,), 0,
+                               cfg.vocab)),
+                           max_new_tokens=6, arrival=0.0) for i in range(3)]
+        eng.run()
+        return [r.output() for r in reqs]
+
+    got = run(make_serving_mesh(8))      # mesh engine FIRST
+    assert ap.get_mesh() is not None
+    ref = run(None)                      # plain engine after: must clear it
+    assert ap.get_mesh() is None
+    for a, b in zip(ref, got):
+        assert (a == b).all(), (a.tolist(), b.tolist())
+    print('OK')
+    """, n_devices=8)
+    assert "OK" in out
+
+
+@pytest.mark.slow  # two full engine streams in a subprocess
+def test_moe_arch_sharded_token_identity(subproc):
+    """MoE arch under the mesh: expert weights shard their output axis
+    and run the batched (expert-site) base path, while attn/mlp deltas
+    dispatch through shard_map — tokens must still match single-device.
+    (MoE expert-site deltas themselves are rejected by slot dispatch, so
+    the tenant's moe subtree is pruned to None.)"""
+    out = subproc("""
+    import dataclasses
+    import numpy as np, jax
+    from repro.configs import get_smoke_config
+    from repro.launch.mesh import make_serving_mesh
+    from repro.launch.serve import RATIO_SPECS, synth_tenants
+    from repro.models import lm
+    from repro.serve import ContinuousEngine
+    from repro.serve.scheduler import VirtualClock
+
+    cfg = get_smoke_config('qwen3-moe-30b-a3b')
+    cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    rng = jax.random.PRNGKey(0)
+    base = lm.init_params(cfg, rng)
+    (name, deltas, rep), = synth_tenants(cfg, base, 1, RATIO_SPECS[8], rng)
+    deltas = dict(deltas, moe=None)   # expert-site deltas can't slot-dispatch
+
+    def run(mesh):
+        eng = ContinuousEngine(cfg, base, n_slots=2, max_seq=32,
+                               clock=VirtualClock(tick=0.01), mesh=mesh)
+        eng.register_tenant(name, deltas, rep)
+        reqs = [eng.submit(t, np.asarray(jax.random.randint(
+                    jax.random.fold_in(rng, 60 + i), (6,), 0, cfg.vocab)),
+                    max_new_tokens=4, arrival=0.0)
+                for i, t in enumerate([name, None, name])]
+        eng.run()
+        return [r.output() for r in reqs]
+
+    ref = run(None)
+    got = run(make_serving_mesh(8))
+    for a, b in zip(ref, got):
+        assert (a == b).all(), (a.tolist(), b.tolist())
+    print('OK')
+    """, n_devices=8)
+    assert "OK" in out
+
+
+@pytest.mark.slow  # two full engine streams in a subprocess
+def test_ssm_arch_sharded_token_identity(subproc):
+    """State-carrying mixer (exact-length buckets) also decodes token-
+    identically under the mesh."""
+    out = subproc("""
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.configs import get_smoke_config
+    from repro.launch.mesh import make_serving_mesh
+    from repro.launch.serve import RATIO_SPECS, synth_tenants
+    from repro.models import lm
+    from repro.serve import ContinuousEngine
+    from repro.serve.scheduler import VirtualClock
+
+    cfg = get_smoke_config('mamba2-370m')
+    rng = jax.random.PRNGKey(0)
+    base = lm.init_params(cfg, rng)
+    tenants = synth_tenants(cfg, base, 2, RATIO_SPECS[8], rng)
+
+    def run(mesh):
+        eng = ContinuousEngine(cfg, base, n_slots=2, max_seq=32,
+                               clock=VirtualClock(tick=0.01), mesh=mesh)
+        for name, deltas, rep in tenants:
+            eng.register_tenant(name, deltas, rep)
+        reqs = [eng.submit(f'tenant{i % 2}',
+                           np.asarray(jax.random.randint(
+                               jax.random.fold_in(rng, 50 + i), (6,), 0,
+                               cfg.vocab)),
+                           max_new_tokens=4, arrival=0.0) for i in range(3)]
+        eng.run()
+        return [r.output() for r in reqs]
+
+    ref = run(None)
+    got = run(make_serving_mesh(8))
+    for a, b in zip(ref, got):
+        assert (a == b).all(), (a.tolist(), b.tolist())
+    print('OK')
+    """, n_devices=8)
+    assert "OK" in out

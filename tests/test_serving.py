@@ -31,7 +31,15 @@ def _batch(cfg, rng, B, S):
     return batch
 
 
-@pytest.mark.parametrize("arch", list_archs())
+# a fast representative subset runs on every PR; the full arch sweep is
+# the heavy nightly part
+_SWEEP_FAST = {"llama3.2-1b", "mamba2-370m"}
+
+
+@pytest.mark.parametrize(
+    "arch",
+    [a if a in _SWEEP_FAST else pytest.param(a, marks=pytest.mark.slow)
+     for a in list_archs()])
 def test_prefill_decode_matches_forward(arch):
     cfg = _cfg(arch)
     rng = jax.random.PRNGKey(0)

@@ -21,6 +21,9 @@ from repro.optim.adamw import AdamWConfig
 from repro.serve import Engine
 from repro.train import make_train_step
 
+# full pretrain->SFT->compress->serve pipeline: minutes of CPU training
+pytestmark = pytest.mark.slow
+
 TINY = ArchConfig(
     name="tiny-sys", family="dense", n_layers=2, d_model=64, n_heads=4,
     n_kv=2, head_dim=16, d_ff=128, vocab=64, act="silu", tie_embeddings=True,

@@ -50,6 +50,20 @@ def test_microbatch_equivalence(setup):
                                    atol=5e-3)
 
 
+def test_loss_differentiable_through_delta_path(setup):
+    """grad through deltas= must work: the fusion-pinning barrier in
+    apply_linear carries a straight-through VJP (regression: a bare
+    optimization_barrier has no differentiation rule)."""
+    from repro.core import DeltaDQSpec, compress
+    cfg, params, data = setup
+    ft = jax.tree.map(lambda p: p * 1.01 if p.ndim >= 2 else p, params)
+    deltas, _ = compress(params, ft, DeltaDQSpec(alpha=4.0, k_bits=8, h_g=16))
+    batch = data.batch_at(0)
+    g = jax.grad(lambda p: lm.loss_fn(cfg, p, batch, deltas=deltas)[0])(params)
+    gn = sum(float(jnp.sum(jnp.abs(x))) for x in jax.tree.leaves(g))
+    assert np.isfinite(gn) and gn > 0.0
+
+
 def test_schedules():
     s = schedule.cosine_with_warmup(10, 100)
     assert float(s(jnp.int32(0))) == 0.0
