@@ -1,0 +1,219 @@
+"""Delta-correction kernel microbenchmarks (the decode-path hot ops).
+
+Times every correction formulation the serving engine can dispatch to,
+at decode- and prefill-shaped workloads, and writes ``BENCH_kernels.json``
+at the repo root so the kernel-level perf trajectory is measurable and
+CI-gated (the serve bench measures the end-to-end step; this isolates
+the correction itself).
+
+Variants per shape:
+
+* ``xla_dense_us``    — reconstruct dense + matmul (the old hot path)
+* ``xla_gather_us``   — gather formulation (kernels/fallback.py)
+* ``per_row_dup_us``  / ``per_row_distinct_us``   — per-row slot dispatch
+  (row-gathered stack) on duplicate-heavy / all-distinct decode batches
+* ``segments_dup_us`` / ``segments_distinct_us``  — unique-tenant segment
+  dispatch on the same batches
+
+On CPU hosts the Pallas kernels only run in interpret mode (validation,
+not perf), so the wall-clock variants are the XLA formulations that
+actually serve on this host; compiled-kernel tile timing happens on TPU
+via ``repro.kernels.autotune``. The unique-tenant dedup is a *kernel*
+property (each [h_g, Ob] tile decoded once per segment instead of once
+per row), so the segments-vs-per-row invariant is gated on the
+deterministic decode-tile accounting (``ops.segment_decode_tiles`` vs
+``ops.per_row_decode_tiles``) rather than CPU wall-clock, which cannot
+observe VMEM tile reuse.
+
+CI regression gate::
+
+    python -m benchmarks.kernel_bench --quick --check BENCH_kernels.json \
+        --tolerance 3.0
+
+``--check`` fails (exit 1) when a fresh timing exceeds the committed
+baseline by more than ``tolerance`` x, and enforces the structural
+invariant that segment dispatch beats per-row dispatch whenever the
+decode batch contains duplicate tenants.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# (name, h_in, h_out, h_g, alpha, k_bits, T_decode, T_prefill)
+SHAPES = [
+    ("serve_hg16", 128, 256, 16, 8, 4, 8, 64),
+    ("bench_hg64", 128, 256, 64, 8, 4, 8, 64),
+    ("wide_hg64", 512, 512, 64, 8, 4, 8, 128),
+]
+QUICK_SHAPES = SHAPES[:2]
+
+# duplicate-heavy vs all-distinct decode batches (B = 8 slots)
+DUP_ROWS = np.array([1, 1, 1, 2, 1, 1, 2, 1], np.int32)
+DISTINCT_ROWS = np.array([1, 2, 3, 4, 5, 6, 7, 8], np.int32)
+
+
+def _time(fn, *args, n: int = 50) -> float:
+    # one timing methodology for the table and the gated bench
+    from repro.kernels.autotune import _time as autotune_time
+    return autotune_time(fn, *args, n=n)
+
+
+def kernel_decode_work(h_in=128, h_out=256, h_g=64, ob=128, tb=8) -> dict:
+    """Decode-tile accounting for the Pallas kernels on the two decode
+    batches: the segments kernel must dequantize fewer [h_g, Ob] tiles
+    than the vmapped per-row kernel whenever tenants repeat (that IS the
+    unique-tenant optimization; deterministic, unlike CPU wall-clock)."""
+    from repro.kernels import ops
+    from repro.serve.scheduler import tenant_segments
+    G = h_in // h_g
+    out = {}
+    for tag, rows in (("dup", DUP_ROWS), ("distinct", DISTINCT_ROWS)):
+        seg = tenant_segments(rows)
+        out[f"per_row_{tag}_tiles"] = ops.per_row_decode_tiles(
+            len(rows), n_groups=G, h_out=h_out, ob=ob)
+        out[f"segments_{tag}_tiles"] = ops.segment_decode_tiles(
+            seg.seg_offsets, n_groups=G, h_out=h_out, tb=tb, ob=ob)
+    print(f"kernel decode tiles (dup batch): per-row "
+          f"{out['per_row_dup_tiles']} segments "
+          f"{out['segments_dup_tiles']}")
+    return out
+
+
+def bench_shape(name, h_in, h_out, h_g, alpha, k_bits, t_dec, t_pre) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from repro.core import groupwise_dropout_pack
+    from repro.core.apply import stack_tenant_deltas
+    from repro.kernels import fallback
+    from repro.serve.scheduler import tenant_segments
+
+    rng = jax.random.PRNGKey(0)
+    packs = []
+    for s in range(9):   # rows 0..8 for the distinct batch
+        d = jax.random.normal(jax.random.PRNGKey(s), (h_in, h_out)) * 0.01
+        packs.append(groupwise_dropout_pack(jax.random.PRNGKey(s), d,
+                                            h_g=h_g, alpha=alpha,
+                                            k_bits=k_bits))
+    p = packs[1]
+    stk = stack_tenant_deltas([{"w": q} for q in packs])["w"]
+
+    out = {"shape": {"h_in": h_in, "h_out": h_out, "h_g": h_g,
+                     "alpha": alpha, "k_bits": k_bits,
+                     "T_decode": t_dec, "T_prefill": t_pre}}
+
+    for phase, T in (("decode", t_dec), ("prefill", t_pre)):
+        x = jax.random.normal(rng, (T, h_in))
+        out[f"{phase}_xla_dense_us"] = _time(
+            lambda x: fallback.dense_correction(x, p), x)
+        out[f"{phase}_xla_gather_us"] = _time(
+            lambda x: fallback.gather_correction(x, p), x)
+
+    # slot dispatch at the apply seam (includes the per-row packed
+    # gather / the sort+unsort, exactly what the engine's decode pays)
+    from repro.core.apply import (get_slot_dispatch, set_slot_dispatch,
+                                  slot_delta_matmul, wrap_slot_deltas)
+    xb = jax.random.normal(rng, (len(DUP_ROWS), 1, h_in))
+    prev = get_slot_dispatch()
+    try:
+        for tag, rows in (("dup", DUP_ROWS), ("distinct", DISTINCT_ROWS)):
+            seg = jax.tree.map(jnp.asarray, tenant_segments(rows))
+            sd = wrap_slot_deltas({"w": stk}, jnp.asarray(rows),
+                                  segments=seg)["w"]
+            set_slot_dispatch("per_row")
+            out[f"per_row_{tag}_us"] = _time(
+                lambda x, sd: slot_delta_matmul(x, sd), xb, sd)
+            set_slot_dispatch("segments")
+            out[f"segments_{tag}_us"] = _time(
+                lambda x, sd: slot_delta_matmul(x, sd), xb, sd)
+    finally:
+        set_slot_dispatch(prev)
+
+    print(f"{name}: decode dense {out['decode_xla_dense_us']:.0f}us "
+          f"gather {out['decode_xla_gather_us']:.0f}us | "
+          f"dup per-row {out['per_row_dup_us']:.0f}us "
+          f"segments {out['segments_dup_us']:.0f}us")
+    return out
+
+
+def compare_against(fresh: dict, baseline_path: str, tolerance: float) -> list:
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    fails = []
+    base_entries = baseline.get("entries", {})
+    for name, entry in fresh.get("entries", {}).items():
+        b = base_entries.get(name)
+        if not b:
+            continue
+        for key, us in entry.items():
+            if not key.endswith("_us"):
+                continue
+            base_us = b.get(key)
+            if base_us and us > base_us * tolerance:
+                fails.append(f"{name}.{key} {us:.0f}us > "
+                             f"{tolerance}x baseline {base_us:.0f}us")
+    # structural invariant: the segments kernel must dequantize strictly
+    # fewer tiles than the vmapped per-row kernel whenever the decode
+    # batch has duplicate tenants (deterministic work accounting), and
+    # never more on an all-distinct batch
+    k = fresh.get("kernel_decode_work", {})
+    seg, row = k.get("segments_dup_tiles"), k.get("per_row_dup_tiles")
+    if seg is not None and row is not None and seg >= row:
+        fails.append(f"segments kernel decodes {seg} tiles, per-row {row} "
+                     "on a duplicate-tenant batch (dedup not effective)")
+    seg_d = k.get("segments_distinct_tiles")
+    row_d = k.get("per_row_distinct_tiles")
+    if seg_d is not None and row_d is not None and seg_d > row_d:
+        fails.append(f"segments kernel decodes {seg_d} tiles > per-row "
+                     f"{row_d} on an all-distinct batch")
+    return fails
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="trimmed shape sweep for CI")
+    ap.add_argument("--out", default=None,
+                    help="output JSON (default: repo-root BENCH_kernels.json;"
+                         " quick runs default to BENCH_kernels.quick.json)")
+    ap.add_argument("--check", default=None, metavar="BASELINE_JSON",
+                    help="fail (exit 1) on regression vs this baseline")
+    # kernel micro wall-clocks jitter harder than the serve bench (~2.5x
+    # on contended hosts); the decode-tile invariant is exact regardless
+    ap.add_argument("--tolerance", type=float, default=3.0)
+    args = ap.parse_args()
+    if args.out is None:
+        args.out = os.path.join(
+            REPO, "BENCH_kernels.quick.json" if args.quick
+            else "BENCH_kernels.json")
+
+    import jax
+    shapes = QUICK_SHAPES if args.quick else SHAPES
+    report = {"backend": jax.default_backend(), "entries": {}}
+    for spec in shapes:
+        report["entries"][spec[0]] = bench_shape(*spec)
+    report["kernel_decode_work"] = kernel_decode_work()
+
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {args.out}")
+
+    if args.check:
+        fails = compare_against(report, args.check, args.tolerance)
+        if fails:
+            for f_ in fails:
+                print(f"REGRESSION: {f_}", file=sys.stderr)
+            sys.exit(1)
+        print(f"# kernel bench regression check vs {args.check}: OK "
+              f"(tolerance {args.tolerance}x)")
+
+
+if __name__ == "__main__":
+    main()

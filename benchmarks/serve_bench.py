@@ -76,12 +76,23 @@ def decode_overhead():
 
 
 def continuous_bench(n_tenants: int, n_requests: int = 16, max_new: int = 8,
-                     n_slots: int = 4, arrival_gap: float = 0.02) -> dict:
-    """Mixed staggered stream through the continuous engine (smoke config)."""
+                     n_slots: int = 4, arrival_gap: float = 0.02,
+                     devices: int = 1) -> dict:
+    """Mixed staggered stream through the continuous engine (smoke config).
+
+    ``devices > 1`` serves the same stream on a ``(1, devices)`` mesh
+    (tensor-parallel base, output-sharded packed deltas) — on CPU the
+    devices are faked via ``--xla_force_host_platform_device_count``,
+    which is how the CI multi-device bench row runs.
+    """
     cfg = get_smoke_config("llama3.2-1b")
     rng = jax.random.PRNGKey(0)
     base = lm.init_params(cfg, rng)
-    eng = ContinuousEngine(cfg, base, n_slots=n_slots, max_seq=64)
+    mesh = None
+    if devices > 1:
+        from repro.launch.mesh import make_serving_mesh
+        mesh = make_serving_mesh(devices)
+    eng = ContinuousEngine(cfg, base, n_slots=n_slots, max_seq=64, mesh=mesh)
     for name, deltas, _ in synth_tenants(cfg, base, n_tenants, SERVE_SPEC, rng):
         eng.register_tenant(name, deltas)
 
@@ -108,6 +119,7 @@ def continuous_bench(n_tenants: int, n_requests: int = 16, max_new: int = 8,
         "n_tenants": n_tenants,
         "n_requests": n_requests,
         "n_slots": n_slots,
+        "devices": devices,
         "arrival_gap_s": arrival_gap,
         "tokens_per_sec": rep["tokens_per_sec"],
         "ttft_p50_ms": 1e3 * rep["ttft_p50"] if rep["ttft_p50"] is not None else None,
@@ -147,6 +159,15 @@ def compare_against(fresh: dict, baseline_path: str, tolerance: float) -> list:
             fails.append(
                 f"{c['n_tenants']}-tenant throughput {c['tokens_per_sec']:.0f} "
                 f"tok/s < baseline {b['tokens_per_sec']:.0f}/{tolerance}")
+    b_sh = baseline.get("continuous_sharded")
+    f_sh = fresh.get("continuous_sharded")
+    if b_sh and f_sh and b_sh.get("n_requests") == f_sh.get("n_requests") \
+            and b_sh.get("devices") == f_sh.get("devices"):
+        if f_sh["tokens_per_sec"] < b_sh["tokens_per_sec"] / tolerance:
+            fails.append(
+                f"sharded ({f_sh['devices']}-device) throughput "
+                f"{f_sh['tokens_per_sec']:.0f} tok/s < baseline "
+                f"{b_sh['tokens_per_sec']:.0f}/{tolerance}")
     return fails
 
 
@@ -164,6 +185,11 @@ def main():
     ap.add_argument("--check", default=None, metavar="BASELINE_JSON",
                     help="fail (exit 1) on regression vs this baseline")
     ap.add_argument("--tolerance", type=float, default=2.0)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="also run a sharded 2-tenant row over N fake "
+                         "devices (requires XLA_FLAGS=--xla_force_host_"
+                         "platform_device_count=N); recorded under "
+                         "'continuous_sharded'")
     args = ap.parse_args()
     if args.out is None:
         args.out = os.path.join(
@@ -173,6 +199,9 @@ def main():
     report = {"micro": decode_overhead(), "continuous": []}
     for n_tenants in tenant_sweep:
         report["continuous"].append(continuous_bench(n_tenants))
+    if args.devices > 1:
+        report["continuous_sharded"] = continuous_bench(
+            2, n_requests=8, devices=args.devices)
 
     base_bytes = report["continuous"][0]["base_bytes"]
     delta_bytes = report["continuous"][0]["delta_bytes_per_tenant"]

@@ -31,6 +31,13 @@ from repro.core.pack import PackedDelta, reconstruct_dense
 # lowers on real TPUs; everything else uses the XLA fallback.
 _USE_PALLAS = False
 
+# Mixed-tenant decode dispatch mode. "segments" (default) groups batch
+# rows by tenant so each unique delta is dequantized once per step
+# (requires the SlotDelta to carry a TenantSegments layout — built host-
+# side by serve.scheduler.tenant_segments). "per_row" is the legacy
+# path: gather a per-row delta stack and reconstruct/apply per row.
+_SLOT_DISPATCH = "segments"
+
 # Active serving mesh (set by mesh-mode engines/launchers). When a mesh
 # with a >1 `model` axis is installed, every delta correction routes
 # through the shard_map'd output-column-partitioned path in
@@ -42,6 +49,17 @@ _MESH = None
 def set_use_pallas(flag: bool) -> None:
     global _USE_PALLAS
     _USE_PALLAS = flag
+
+
+def set_slot_dispatch(mode: str) -> None:
+    """Select the mixed-tenant decode dispatch: "segments" | "per_row"."""
+    assert mode in ("segments", "per_row"), mode
+    global _SLOT_DISPATCH
+    _SLOT_DISPATCH = mode
+
+
+def get_slot_dispatch() -> str:
+    return _SLOT_DISPATCH
 
 
 def set_mesh(mesh) -> None:
@@ -107,6 +125,37 @@ def _replicated(t: jnp.ndarray) -> jnp.ndarray:
 
 @jax.tree_util.register_pytree_node_class
 @dataclass
+class TenantSegments:
+    """Static-shape tenant-segment layout for a mixed decode batch.
+
+    Built host-side (``serve.scheduler.tenant_segments``) from the
+    per-slot tenant rows: batch rows are sorted (stably) by tenant so
+    each unique tenant occupies one contiguous segment. All arrays have
+    shapes that depend only on the slot count B, so the decode step
+    still compiles exactly once:
+
+      order       int32 [B]    row permutation (sorted by tenant row)
+      inv_order   int32 [B]    inverse permutation (unsort the output)
+      seg_rows    int32 [B]    tenant row per segment (padding rows 0)
+      seg_offsets int32 [B+1]  half-open row ranges; empty segments have
+                               equal offsets and are skipped at runtime
+    """
+    order: jnp.ndarray
+    inv_order: jnp.ndarray
+    seg_rows: jnp.ndarray
+    seg_offsets: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.order, self.inv_order, self.seg_rows,
+                self.seg_offsets), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
 class SlotDelta:
     """A tenant-stacked :class:`PackedDelta` plus per-batch-row tenant ids.
 
@@ -114,12 +163,15 @@ class SlotDelta:
     per-kind layer stack): idx/codes [T, *lead, G, K, O], scale/zero
     [T, *lead]. ``slots`` is int32 [B] mapping each batch row to a tenant
     row; row 0 is conventionally the zero delta (base model).
+    ``segments`` (optional) carries the sorted tenant-segment layout
+    consumed by the unique-tenant dispatch.
     """
     delta: PackedDelta
     slots: jnp.ndarray
+    segments: Optional[TenantSegments] = None
 
     def tree_flatten(self):
-        return (self.delta, self.slots), None
+        return (self.delta, self.slots, self.segments), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -133,7 +185,7 @@ class SlotDelta:
             d.scale[:, i] if jnp.ndim(d.scale) >= 2 else d.scale,
             d.zero[:, i] if jnp.ndim(d.zero) >= 2 else d.zero,
             d.h_in, d.h_out, d.h_g, d.keep, d.alpha, d.k_bits, d.m),
-            self.slots)
+            self.slots, self.segments)
 
     def gather(self) -> PackedDelta:
         """Per-row delta: [B, G, K, O] gathered from the tenant stack."""
@@ -146,21 +198,65 @@ class SlotDelta:
             d.h_in, d.h_out, d.h_g, d.keep, d.alpha, d.k_bits, d.m)
 
 
-def slot_delta_matmul(x: jnp.ndarray, sd: SlotDelta) -> jnp.ndarray:
-    """Per-row correction: x [B, S, h_in] with row b using tenant slots[b].
+def _segment_dispatch(x: jnp.ndarray, sd: SlotDelta) -> jnp.ndarray:
+    """Unique-tenant correction: sort rows by tenant, dequantize each
+    unique delta once, apply per segment, unsort. x [B, ..., h_in]."""
+    seg = sd.segments
+    d = sd.delta
+    B = x.shape[0]
+    lead = x.shape[1:-1]
+    tokens_per_row = 1
+    for n in lead:
+        tokens_per_row *= n
+    xs = jnp.take(x, seg.order, axis=0)
+    x2 = xs.reshape(B * tokens_per_row, d.h_in)
+    # row ranges scale with the tokens folded out of each batch row
+    offs = seg.seg_offsets * tokens_per_row
+    if _MESH is not None:
+        from repro.kernels import ops
+        y2 = ops.delta_correction_sharded(
+            x2, d, _MESH, use_pallas=_USE_PALLAS,
+            segments=(seg.seg_rows, offs))
+        if y2 is None:
+            y2 = _segment_local(x2, d, seg.seg_rows, offs)
+    else:
+        y2 = _segment_local(x2, d, seg.seg_rows, offs)
+    # same dtype round-trip as every other path (no-op for f32)
+    y = y2.reshape(B, *lead, d.h_out).astype(x.dtype)
+    return jnp.take(y, seg.inv_order, axis=0)
 
-    Gathers each row's packed delta (tiny vs dense) then contracts; on TPU
-    hot paths the gathered stack routes through the vmapped Pallas kernel.
+
+def _segment_local(x2, d, seg_rows, seg_offsets):
+    from repro.kernels import fallback, ops
+    if _USE_PALLAS:
+        return ops.delta_spmm_segments(x2, d, seg_rows, seg_offsets)
+    return fallback.segment_correction(x2, d, seg_rows, seg_offsets)
+
+
+def slot_delta_matmul(x: jnp.ndarray, sd: SlotDelta) -> jnp.ndarray:
+    """Mixed-tenant correction: x [B, S, h_in] with row b using tenant
+    slots[b].
+
+    Default ("segments" dispatch, when the SlotDelta carries a
+    TenantSegments layout): rows are grouped by tenant so each *unique*
+    delta is dequantized once per step. Fallback ("per_row" dispatch, or
+    no layout attached): gather each row's packed delta (tiny vs dense)
+    then contract per row; on TPU hot paths the gathered stack routes
+    through the vmapped Pallas kernel. The per-row path is the legacy
+    behavior, kept selectable via :func:`set_slot_dispatch`.
     """
+    if sd.segments is not None and _SLOT_DISPATCH == "segments":
+        return _segment_dispatch(x, sd)
     g = sd.gather()
     y = _sharded_correction(x, g)
     if y is not None:
         return y
+    from repro.kernels import fallback, ops
     if _USE_PALLAS:
-        from repro.kernels import ops
         return ops.delta_spmm_slots(x, g)
-    dense = reconstruct_dense(g, dtype=x.dtype)      # [B, h_in, h_out]
-    return jnp.einsum("b...d,bdf->b...f", x, dense)
+    # per-row gather: never materializes the dense [B, h_in, h_out]
+    # stack, and bit-matches the shared-tenant gather formulation
+    return fallback.gather_correction_rows(x, g).astype(x.dtype)
 
 
 def delta_matmul(x: jnp.ndarray, d) -> jnp.ndarray:
@@ -171,9 +267,16 @@ def delta_matmul(x: jnp.ndarray, d) -> jnp.ndarray:
         y = _sharded_correction(x, d)
         if y is not None:
             return y
-    if _USE_PALLAS and not d.stack_shape():
-        from repro.kernels import ops
-        return ops.delta_spmm(x, d)
+        if _USE_PALLAS:
+            from repro.kernels import ops
+            return ops.delta_spmm(x, d)
+        # XLA fallback: the gather formulation at decode-sized token
+        # counts, dense reconstruction at prefill-sized ones. The same
+        # primitive (same contraction shape) backs the segment dispatch,
+        # which is what keeps mixed-stream decode token-identical to
+        # this per-tenant reference path.
+        from repro.kernels import fallback
+        return fallback.correction_nd(x, d).astype(x.dtype)
     dense = reconstruct_dense(d, dtype=x.dtype)
     return x @ dense
 
@@ -310,9 +413,13 @@ def stack_tenant_deltas(trees: list) -> Any:
     return jax.tree.map(stack, *trees, is_leaf=_is_pd)
 
 
-def wrap_slot_deltas(stacked: Any, slots: jnp.ndarray) -> Any:
-    """Attach per-row tenant ids to every leaf of a tenant-stacked tree."""
-    return jax.tree.map(lambda d: SlotDelta(d, slots), stacked, is_leaf=_is_pd)
+def wrap_slot_deltas(stacked: Any, slots: jnp.ndarray,
+                     segments: Optional[TenantSegments] = None) -> Any:
+    """Attach per-row tenant ids (and, optionally, the sorted tenant-
+    segment layout for unique-tenant dispatch) to every leaf of a
+    tenant-stacked tree."""
+    return jax.tree.map(lambda d: SlotDelta(d, slots, segments), stacked,
+                        is_leaf=_is_pd)
 
 
 def merge_delta(params: Any, deltas: Any) -> Any:

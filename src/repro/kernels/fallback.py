@@ -1,0 +1,177 @@
+"""Pure-XLA delta-correction formulations (the non-Pallas hot path).
+
+On hosts without a TPU (CPU CI, the bench host) the delta correction is
+plain XLA, and its formulation dominates the decode-path overhead. Two
+mathematically identical formulations with opposite scaling:
+
+* :func:`dense_correction` — scatter the packed delta to a dense
+  ``[h_in, h_out]`` matrix, then one dense matmul. The scatter cost is
+  paid once regardless of T, so it wins for prefill-sized token counts.
+* :func:`gather_correction` — never materialize the dense delta: gather
+  each kept element's activation by its (flattened) index and contract
+  against the dequantized values directly
+  (``y[t,o] = sum_{g,k} x[t, g*h_g + idx[g,k,o]] * val[g,k,o]``).
+  Work is ``T * nnz`` instead of ``nnz`` scatter + ``T * h_in * h_out``
+  matmul — at decode shapes (T = a handful of slots) this is 5-20x
+  faster and is what collapses the serve-time delta overhead.
+
+:func:`correction` picks between them by token count; the crossover is
+the autotuned ``gather_max_t`` (kernels/autotune.py).
+
+Mixed-tenant decode adds two more:
+
+* :func:`gather_correction_rows` — per-row deltas (a row-gathered
+  ``[B]`` stack): the same gather contraction with per-row values. This
+  replaces the old ``[B, h_in, h_out]`` dense reconstruction, whose
+  memory blew up B-fold even when every row shared one tenant.
+* :func:`segment_correction` — the unique-tenant dispatch: rows sorted
+  by tenant, a scan over (statically shaped, possibly empty) tenant
+  segments that dequantizes each *unique* delta once and applies it to
+  the whole batch with rows outside the segment masked. The per-segment
+  contraction is the exact same ``gather_correction`` primitive the
+  single-tenant path uses, which keeps mixed-stream decode bit-identical
+  to the per-tenant reference engine.
+
+Bit-identity note: the gather contraction is written as an elementwise
+multiply followed by ``sum`` over one merged (group, keep) axis — NOT a
+dot_general/einsum — because XLA's dot reduction order varies with the
+batch extent, while the reduce op's per-(row, column) inner loop does
+not. The token-identity contract (mixed-slot decode == per-tenant
+reference decode, exact) depends on this: the same row correction must
+produce the same bits whether the row is decoded alone, in a tenant
+group, or in a mixed slot batch.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.pack import PackedDelta, decode_values, reconstruct_dense
+
+
+def _flat_gather_idx(d: PackedDelta, idx: jnp.ndarray) -> jnp.ndarray:
+    """Local in-group indices [..., G, K, O] -> flat h_in indices."""
+    G = d.n_groups
+    base = (jnp.arange(G, dtype=jnp.int32) * d.h_g)[:, None, None]
+    return idx.astype(jnp.int32) + base
+
+
+def dense_correction(x2: jnp.ndarray, d: PackedDelta) -> jnp.ndarray:
+    """x2 [T, h_in] @ dense(delta) -> [T, h_out] f32 (reconstruct path)."""
+    return x2.astype(jnp.float32) @ reconstruct_dense(d)
+
+
+def gather_correction(x2: jnp.ndarray, d: PackedDelta) -> jnp.ndarray:
+    """x2 [T, h_in] -> [T, h_out] f32 without materializing the dense delta."""
+    vals = decode_values(d)                          # [G, K, O] f32
+    G, K, O = vals.shape
+    gidx = _flat_gather_idx(d, d.idx).reshape(-1)    # [G*K*O]
+    sel = x2.astype(jnp.float32)[:, gidx].reshape(x2.shape[0], G * K, O)
+    # multiply + axis-sum (not einsum): batch-extent-stable bits, see above
+    return (sel * vals.reshape(G * K, O)[None]).sum(axis=1)
+
+
+def correction(x2: jnp.ndarray, d: PackedDelta, *,
+               gather_max_t: int = 64) -> jnp.ndarray:
+    """Formulation chooser: gather for decode-sized T, dense otherwise."""
+    if x2.shape[0] <= gather_max_t:
+        return gather_correction(x2, d)
+    return dense_correction(x2, d)
+
+
+def correction_nd(x: jnp.ndarray, d: PackedDelta, *,
+                  gather_max_t: Optional[int] = None) -> jnp.ndarray:
+    """x [..., h_in] -> [..., h_out] f32: flatten leading dims, choose the
+    formulation, restore shape.
+
+    The ONE entry point for every XLA-fallback correction site
+    (replicated apply path, out-of-envelope ops path, sharded shard_map
+    body) — the token-identity contract requires all of them to choose
+    the same formulation with the same autotune key, so the lookup lives
+    here. Pass ``gather_max_t`` to pin the decision externally (the
+    sharded path decides on the GLOBAL envelope, then applies it to the
+    local column slice).
+    """
+    if gather_max_t is None:
+        from repro.kernels import autotune
+        gather_max_t = autotune.lookup(d.h_g, d.keep, d.k_bits, d.h_in,
+                                       d.h_out)["gather_max_t"]
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, d.h_in)
+    y = correction(x2, d, gather_max_t=gather_max_t)
+    return y.reshape(*lead, d.h_out)
+
+
+def _rows_core(x_rows: jnp.ndarray, gidx: jnp.ndarray,
+               vals: jnp.ndarray) -> jnp.ndarray:
+    """Shared per-row contraction: x_rows [N, h_in], gidx [N, G*K*O] flat
+    h_in indices, vals [N, G*K, O] -> [N, O] f32.
+
+    Every per-row path (row-gathered stack, segment dispatch) funnels
+    through this one function so the gather + reduce shapes — and
+    therefore the bits — are identical across dispatch modes.
+    """
+    N = x_rows.shape[0]
+    GK, O = vals.shape[1], vals.shape[2]
+    sel = jnp.take_along_axis(x_rows.astype(jnp.float32), gidx, axis=1)
+    sel = sel.reshape(N, GK, O)
+    return (sel * vals).sum(axis=1)
+
+
+def gather_correction_rows(x: jnp.ndarray, d: PackedDelta) -> jnp.ndarray:
+    """Per-row deltas: x [B, ..., h_in], d row-stacked [B] -> [B, ..., h_out].
+
+    Peak extra memory is ``B * nnz`` floats (the gathered activations),
+    not ``B * h_in * h_out`` — rows sharing a tenant no longer multiply a
+    dense reconstruction.
+    """
+    B = x.shape[0]
+    vals = decode_values(d)                          # [B, G, K, O]
+    _, G, K, O = vals.shape
+    gidx = _flat_gather_idx(d, d.idx)                # [B, G, K, O]
+    x2 = x.astype(jnp.float32).reshape(B, -1, d.h_in)
+    T = x2.shape[1]
+    # flatten (row, token) so the reduce shape matches gather_correction's
+    # [rows, G*K, O] exactly — same bits as the shared-tenant path
+    x_rows = x2.reshape(B * T, d.h_in)
+    gidx_rows = jnp.broadcast_to(
+        gidx.reshape(B, 1, G * K * O), (B, T, G * K * O)).reshape(B * T, -1)
+    vals_rows = jnp.broadcast_to(
+        vals.reshape(B, 1, G * K, O), (B, T, G * K, O)).reshape(B * T, G * K, O)
+    y = _rows_core(x_rows, gidx_rows, vals_rows)
+    return y.reshape(*x.shape[:-1], d.h_out)
+
+
+def segment_correction(x2: jnp.ndarray, d: PackedDelta,
+                       seg_rows: jnp.ndarray,
+                       seg_offsets: jnp.ndarray) -> jnp.ndarray:
+    """Unique-tenant dispatch: x2 [T, h_in] rows sorted by tenant.
+
+    ``d`` is the tenant-stacked packed delta [R, ...]; ``seg_rows`` [S]
+    maps segment -> tenant row and ``seg_offsets`` [S+1] gives each
+    segment's half-open row range (S is a static shape — padding
+    segments are empty). The packed (still-compressed) bytes are routed
+    to rows through the segment map and contracted by the same
+    :func:`_rows_core` the per-row path uses — identical gather/reduce
+    shapes, identical bits.
+
+    Note on CPU economics: XLA has no cross-row tile reuse, so the
+    unique-tenant *compute* dedup does not pay here — gathering f32
+    dequantized values per unique tenant costs more than re-unpacking
+    the (8x smaller) packed codes per row. This fallback therefore
+    matches the per-row path's work; the genuine dedup lives in the
+    Pallas segments kernel, which decodes each [h_g, Ob] VMEM tile once
+    per segment instead of once per row (gated by kernel_bench).
+    """
+    T = x2.shape[0]
+    # map each (sorted) row to its segment: count of segment ends <= row
+    rows_iota = jnp.arange(T, dtype=jnp.int32)
+    row_seg = (rows_iota[:, None] >= seg_offsets[None, 1:]).sum(axis=1)
+    tenant_rows = seg_rows[row_seg]                  # [T]
+    dl = PackedDelta(
+        d.idx[tenant_rows], d.codes[tenant_rows],
+        jnp.asarray(d.scale, jnp.float32)[tenant_rows],
+        jnp.asarray(d.zero, jnp.int32)[tenant_rows],
+        d.h_in, d.h_out, d.h_g, d.keep, d.alpha, d.k_bits, d.m)
+    return gather_correction_rows(x2[:, None, :], dl)[:, 0]

@@ -3,7 +3,16 @@
 Handle envelope checks (tile divisibility, supported h_g/keep), input
 prep (padding, scalar shaping) and the interpret-mode switch used for
 CPU validation. Outside the kernel envelope the XLA fallback
-(reconstruct-then-matmul) is used — mathematically identical.
+(``kernels.fallback``: gather formulation at decode token counts, dense
+reconstruct-then-matmul at prefill counts) is used — mathematically
+identical. Tile sizes (tb, ob, kc) default to the persisted autotune
+table (``kernels.autotune``); explicit arguments always win.
+
+Output columns that don't divide the tile run on the largest reasonable
+divisor tile (no padding); only when every divisor is pathologically
+small (prime-ish ``h_out``) is the packed column axis padded up to a
+pow2 tile and the result sliced — at most one partial tile instead of
+degrading to an ``ob=1`` grid.
 
 Multi-device: :func:`delta_correction_sharded` partitions the packed
 delta along its output-column axis over the mesh ``model`` axis with
@@ -14,8 +23,6 @@ batch sizes; each output column is produced by exactly one shard).
 """
 from __future__ import annotations
 
-import functools
-import os
 from typing import Optional
 
 import jax
@@ -24,6 +31,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core.pack import PackedDelta, reconstruct_dense
+from repro.kernels import autotune, fallback
 from repro.kernels import delta_spmm as _k
 
 # CPU containers run kernels in interpret mode; real TPUs compile them.
@@ -52,37 +60,90 @@ def _pad_rows(x: jnp.ndarray, mult: int):
     return x, T
 
 
+def _tiles(d: PackedDelta, tb, ob, kc) -> dict:
+    """Resolve tile sizes: explicit args win, else the autotune table."""
+    tuned = autotune.lookup(d.h_g, d.keep, d.k_bits, d.h_in, d.h_out)
+    return {"tb": tb if tb is not None else tuned["tb"],
+            "ob": ob if ob is not None else tuned["ob"],
+            "kc": kc if kc is not None else tuned["kc"],
+            "gather_max_t": tuned["gather_max_t"]}
 
 
-def delta_spmm(x: jnp.ndarray, d: PackedDelta, *, tb: int = 128, ob: int = 128,
+# smallest column tile worth running unpadded; below this a divisor tile
+# makes a pathological grid and pad-to-pow2 wins
+_MIN_COL_TILE = 32
+
+
+def _col_tile(h_out: int, ob: int) -> int:
+    """Effective column tile for ``h_out`` output columns.
+
+    Prefer a divisor of ``h_out`` (no padding, no wasted columns — in
+    the fused kernel padding also copies the whole base matrix); only
+    when the best divisor is pathologically small (< _MIN_COL_TILE, e.g.
+    prime-ish h_out) fall back to a pow2 tile and let the caller pad
+    and slice."""
+    cap = min(ob, h_out)
+    if h_out % cap == 0:
+        return cap
+    for t in range(cap, _MIN_COL_TILE - 1, -1):
+        if h_out % t == 0:
+            return t
+    return min(ob, _pow2_ceil(h_out))
+
+
+def _pad_cols(d: PackedDelta, ob: int) -> PackedDelta:
+    """Pad the packed column axis to an ``ob`` multiple (slice the result).
+
+    Padded columns decode to garbage values ((0 - zero) * scale) but are
+    sliced off by every caller before the result escapes, so only the
+    real columns are ever observed.
+    """
+    pad = (-d.h_out) % ob
+    if not pad:
+        return d
+    widths = [(0, 0)] * (d.idx.ndim - 1) + [(0, pad)]
+    return PackedDelta(jnp.pad(d.idx, widths), jnp.pad(d.codes, widths),
+                       d.scale, d.zero, d.h_in, d.h_out + pad, d.h_g,
+                       d.keep, d.alpha, d.k_bits, d.m)
+
+
+def delta_spmm(x: jnp.ndarray, d: PackedDelta, *, tb: Optional[int] = None,
+               ob: Optional[int] = None, kc: Optional[int] = None,
                interpret: Optional[bool] = None) -> jnp.ndarray:
     """y = x @ dequant(d). x [..., h_in] -> [..., h_out] (f32)."""
     if interpret is None:
         interpret = _INTERPRET
+    t = _tiles(d, tb, ob, kc)
     if not kernel_supported(d):
-        return x.reshape(-1, d.h_in).astype(jnp.float32) @ reconstruct_dense(d) \
-            if x.ndim == 2 else x @ reconstruct_dense(d, dtype=x.dtype)
+        return fallback.correction_nd(x, d,
+                                      gather_max_t=t["gather_max_t"])
     lead = x.shape[:-1]
     x2 = x.reshape(-1, d.h_in)
-    tb_eff = min(tb, max(_pow2_floor(x2.shape[0]), 8))
+    tb_eff = min(t["tb"], max(_pow2_floor(x2.shape[0]), 8))
     x2, T = _pad_rows(x2, tb_eff)
-    ob_eff = ob if d.h_out % ob == 0 else _largest_divisor_tile(d.h_out, ob)
+    ob_eff = _col_tile(d.h_out, t["ob"])
+    dp = _pad_cols(d, ob_eff)
     s, z = _scalars(d)
-    y = _k.delta_spmm_kernel(x2, d.idx, d.codes, s, z, h_g=d.h_g, keep=d.keep,
-                             k_bits=d.k_bits, h_out=d.h_out,
-                             tb=tb_eff, ob=ob_eff, interpret=interpret)
-    return y[:T].reshape(*lead, d.h_out)
+    y = _k.delta_spmm_kernel(x2, dp.idx, dp.codes, s, z, h_g=d.h_g,
+                             keep=d.keep, k_bits=d.k_bits, h_out=dp.h_out,
+                             tb=tb_eff, ob=ob_eff, kc=t["kc"],
+                             interpret=interpret)
+    return y[:T, :d.h_out].reshape(*lead, d.h_out)
 
 
-def delta_spmm_slots(x: jnp.ndarray, d: PackedDelta, *, tb: int = 128,
-                     ob: int = 128, interpret: Optional[bool] = None) -> jnp.ndarray:
+def delta_spmm_slots(x: jnp.ndarray, d: PackedDelta, *,
+                     tb: Optional[int] = None, ob: Optional[int] = None,
+                     kc: Optional[int] = None,
+                     interpret: Optional[bool] = None) -> jnp.ndarray:
     """Per-row delta matmul for mixed-tenant decode batches.
 
     x [B, ..., h_in]; d is a row-gathered PackedDelta stacked [B, ...]
     (one tenant's packed delta per batch row). Row b computes
-    ``x[b] @ dequant(d[b])``. On TPU the per-matrix kernel is vmapped over
-    the row axis; elsewhere (and in interpret mode, where the batching
-    rule is not exercised) the dense XLA fallback is used.
+    ``x[b] @ dequant(d[b])``. On TPU the per-matrix kernel is vmapped
+    over the row axis; elsewhere (and in interpret mode, where the
+    batching rule is not exercised) the gather-formulation fallback is
+    used — it never materializes a dense ``[B, h_in, h_out]`` tensor, so
+    rows sharing a tenant no longer multiply a dense reconstruction.
     """
     if interpret is None:
         interpret = _INTERPRET
@@ -90,24 +151,75 @@ def delta_spmm_slots(x: jnp.ndarray, d: PackedDelta, *, tb: int = 128,
     assert d.stack_shape() == (B,), (d.stack_shape(), x.shape)
     probe = d.index(0)
     if interpret or not kernel_supported(probe):
-        dense = reconstruct_dense(d, dtype=x.dtype)   # [B, h_in, h_out]
-        return jnp.einsum("b...d,bdf->b...f", x, dense)
-    fn = lambda xb, db: delta_spmm(xb, db, tb=tb, ob=ob, interpret=False)
+        return fallback.gather_correction_rows(x, d)
+    fn = lambda xb, db: delta_spmm(xb, db, tb=tb, ob=ob, kc=kc,
+                                   interpret=False)
     return jax.vmap(fn)(x, d)
+
+
+def delta_spmm_segments(x_sorted: jnp.ndarray, d: PackedDelta,
+                        seg_rows: jnp.ndarray, seg_offsets: jnp.ndarray, *,
+                        tb: Optional[int] = None, ob: Optional[int] = None,
+                        kc: Optional[int] = None,
+                        interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Unique-tenant batched slot dispatch: x_sorted rows grouped by tenant.
+
+    x_sorted [T, h_in] (rows pre-sorted so each tenant occupies one
+    contiguous segment); d is the tenant-stacked PackedDelta [R, ...];
+    seg_rows [S] int32 maps segment -> tenant row; seg_offsets [S+1]
+    int32 bounds each segment (empty segments allowed — S is a static
+    shape). Each unique delta is dequantized once per step and applied
+    to its row segment. On TPU this is the batched slot kernel
+    (``delta_spmm_segments_kernel``); elsewhere the scan-over-segments
+    XLA fallback.
+
+    Decode fast path: when the whole batch fits one row tile (the decode
+    regime — T = n_slots), ``tb`` collapses to the padded batch size and
+    the grid has a single row block, skipping the pad-to-pow2 dance.
+    """
+    if interpret is None:
+        interpret = _INTERPRET
+    probe = d.index(0)
+    t = _tiles(probe, tb, ob, kc)
+    if not kernel_supported(probe):
+        return fallback.segment_correction(x_sorted, d, seg_rows, seg_offsets)
+    T = x_sorted.shape[0]
+    if T <= t["tb"]:
+        tb_eff = max(8, -(-T // 8) * 8)     # decode fast path: one row block
+    else:
+        tb_eff = min(t["tb"], max(_pow2_floor(T), 8))
+    x2, T = _pad_rows(x_sorted, tb_eff)
+    ob_eff = _col_tile(d.h_out, t["ob"])
+    dp = _pad_cols(d, ob_eff)
+    scale = jnp.asarray(d.scale, jnp.float32).reshape(-1, 1)
+    zero = jnp.asarray(d.zero, jnp.int32).reshape(-1, 1)
+    y = _k.delta_spmm_segments_kernel(
+        x2, dp.idx, dp.codes, scale, zero,
+        seg_rows.astype(jnp.int32), seg_offsets.astype(jnp.int32),
+        h_g=d.h_g, keep=d.keep, k_bits=d.k_bits, h_out=dp.h_out,
+        tb=tb_eff, ob=ob_eff, kc=t["kc"], interpret=interpret)
+    return y[:T, :d.h_out]
 
 
 def delta_correction_sharded(x: jnp.ndarray, d: PackedDelta, mesh, *,
                              use_pallas: bool = False,
                              interpret: Optional[bool] = None,
-                             tb: int = 128, ob: int = 128) -> Optional[jnp.ndarray]:
+                             tb: Optional[int] = None,
+                             ob: Optional[int] = None,
+                             segments: Optional[tuple] = None
+                             ) -> Optional[jnp.ndarray]:
     """y = x · dequant(d), with d partitioned along output columns.
 
-    ``d`` is either a shared delta (no stack) or a row-gathered stack
-    ``[B]`` matching ``x``'s leading dim (mixed-tenant decode). The
-    shard_map body computes its own h_out/n_model column slice with the
-    exact same local math as the single-device path (Pallas kernel when
-    ``use_pallas``, reconstruct-then-matmul otherwise), so sharded
-    serving is bit-identical to the replicated engine.
+    ``d`` is a shared delta (no stack), a row-gathered stack ``[B]``
+    matching ``x``'s leading dim (per-row mixed-tenant decode), or — with
+    ``segments=(seg_rows, seg_offsets)`` — the tenant stack ``[R]``
+    consumed by the unique-tenant dispatch (x rows pre-sorted by
+    tenant). The shard_map body computes its own h_out/n_model column
+    slice with the exact same local math as the single-device path
+    (Pallas kernel when ``use_pallas``, the gather/segment fallback
+    otherwise), so sharded serving is bit-identical to the replicated
+    engine: the contraction for every output element is unchanged, only
+    *which shard* produces the column differs.
 
     Returns None when the mesh/delta layout does not apply (no model
     axis, h_out not divisible, unsupported stack shape) — the caller
@@ -117,7 +229,10 @@ def delta_correction_sharded(x: jnp.ndarray, d: PackedDelta, mesh, *,
     if n <= 1 or d.h_out % n:
         return None
     stack = d.stack_shape()
-    if stack not in ((), (x.shape[0],)):
+    if segments is not None:
+        if len(stack) != 1:
+            return None
+    elif stack not in ((), (x.shape[0],)):
         return None
     scale = jnp.asarray(d.scale, jnp.float32)
     zero = jnp.asarray(d.zero, jnp.int32)
@@ -128,19 +243,56 @@ def delta_correction_sharded(x: jnp.ndarray, d: PackedDelta, mesh, *,
     def repl(nd: int) -> P:
         return P(*([None] * nd))
 
-    def body(xb, idx, codes, s, z):
+    def local_delta(idx, codes, s, z) -> PackedDelta:
         # local O-slice delta: static meta rebuilt with the shard's h_out
-        dl = PackedDelta(idx, codes, s, z, d.h_in, idx.shape[-1], d.h_g,
-                         d.keep, d.alpha, d.k_bits, d.m)
+        return PackedDelta(idx, codes, s, z, d.h_in, idx.shape[-1], d.h_g,
+                           d.keep, d.alpha, d.k_bits, d.m)
+
+    if segments is not None:
+        seg_rows, seg_offsets = segments
+
+        def body_seg(xb, idx, codes, s, z, sr, so):
+            dl = local_delta(idx, codes, s, z)
+            if use_pallas:
+                return delta_spmm_segments(xb, dl, sr, so, tb=tb, ob=ob,
+                                           kc=kc, interpret=interpret)
+            return fallback.segment_correction(xb, dl, sr, so)
+
+        # NOTE: dtype round-trip happens in the caller (apply.py) for the
+        # segments path; the body stays f32 like its local fallback.
+
+        fn = shard_map(body_seg, mesh=mesh,
+                       in_specs=(repl(x.ndim), last_model(d.idx.ndim),
+                                 last_model(d.codes.ndim), repl(scale.ndim),
+                                 repl(zero.ndim), repl(1), repl(1)),
+                       out_specs=last_model(x.ndim),
+                       check_rep=False)
+        return fn(x, d.idx, d.codes, scale, zero,
+                  jnp.asarray(seg_rows, jnp.int32),
+                  jnp.asarray(seg_offsets, jnp.int32))
+
+    # tiles and formulation decided on the GLOBAL envelope point (the
+    # local slice has a different h_out key: it must not flip the
+    # formulation — sharded and replicated serving would use different
+    # arithmetic — and has no swept autotune entry of its own)
+    t_glob = _tiles(d, tb, ob, None)
+    tb, ob = t_glob["tb"], t_glob["ob"]
+    kc = t_glob["kc"]
+    gather_max_t = t_glob["gather_max_t"]
+
+    def body(xb, idx, codes, s, z):
+        dl = local_delta(idx, codes, s, z)
         if stack:
             if use_pallas:
                 return delta_spmm_slots(xb, dl, tb=tb, ob=ob,
                                         interpret=interpret)
-            dense = reconstruct_dense(dl, dtype=xb.dtype)
-            return jnp.einsum("b...d,bdf->b...f", xb, dense)
-        if use_pallas:
-            return delta_spmm(xb, dl, tb=tb, ob=ob, interpret=interpret)
-        return xb @ reconstruct_dense(dl, dtype=xb.dtype)
+            y = fallback.gather_correction_rows(xb, dl)
+        elif use_pallas:
+            y = delta_spmm(xb, dl, tb=tb, ob=ob, interpret=interpret)
+        else:
+            y = fallback.correction_nd(xb, dl, gather_max_t=gather_max_t)
+        # same dtype round-trip as the replicated path (bit-identity)
+        return y.astype(xb.dtype)
 
     fn = shard_map(body, mesh=mesh,
                    in_specs=(repl(x.ndim), last_model(d.idx.ndim),
@@ -152,37 +304,81 @@ def delta_correction_sharded(x: jnp.ndarray, d: PackedDelta, mesh, *,
 
 
 def fused_base_delta(x: jnp.ndarray, w: jnp.ndarray, d: PackedDelta, *,
-                     tb: int = 128, ob: int = 128,
+                     tb: Optional[int] = None, ob: Optional[int] = None,
+                     kc: Optional[int] = None,
                      interpret: Optional[bool] = None) -> jnp.ndarray:
     """y = x @ (w + dequant(d)); reads x once (separate computation, fused)."""
     if interpret is None:
         interpret = _INTERPRET
     if not kernel_supported(d):
         return (x @ w) + delta_spmm(x, d, interpret=interpret).astype(w.dtype)
+    t = _tiles(d, tb, ob, kc)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, d.h_in)
-    tb_eff = min(tb, max(_pow2_floor(x2.shape[0]), 8))
+    tb_eff = min(t["tb"], max(_pow2_floor(x2.shape[0]), 8))
     x2, T = _pad_rows(x2, tb_eff)
-    ob_eff = ob if d.h_out % ob == 0 else _largest_divisor_tile(d.h_out, ob)
+    ob_eff = _col_tile(d.h_out, t["ob"])
+    dp = _pad_cols(d, ob_eff)
+    wp = w if dp.h_out == d.h_out else jnp.pad(
+        w, ((0, 0), (0, dp.h_out - d.h_out)))
     s, z = _scalars(d)
-    y = _k.fused_base_delta_kernel(x2, w, d.idx, d.codes, s, z, h_g=d.h_g,
+    y = _k.fused_base_delta_kernel(x2, wp, dp.idx, dp.codes, s, z, h_g=d.h_g,
                                    keep=d.keep, k_bits=d.k_bits,
-                                   tb=tb_eff, ob=ob_eff, interpret=interpret)
-    return y[:T].reshape(*lead, d.h_out)
+                                   tb=tb_eff, ob=ob_eff, kc=t["kc"],
+                                   interpret=interpret)
+    return y[:T, :d.h_out].reshape(*lead, d.h_out)
 
 
-def dequant(d: PackedDelta, *, ob: int = 128,
+def dequant(d: PackedDelta, *, ob: Optional[int] = None,
+            kc: Optional[int] = None,
             interpret: Optional[bool] = None) -> jnp.ndarray:
     """Materialize dense delta [h_in, h_out] (merge path)."""
     if interpret is None:
         interpret = _INTERPRET
     if not kernel_supported(d):
         return reconstruct_dense(d)
-    ob_eff = ob if d.h_out % ob == 0 else _largest_divisor_tile(d.h_out, ob)
+    t = _tiles(d, None, ob, kc)
+    ob_eff = _col_tile(d.h_out, t["ob"])
+    dp = _pad_cols(d, ob_eff)
     s, z = _scalars(d)
-    return _k.dequant_kernel(d.idx, d.codes, s, z, h_g=d.h_g, keep=d.keep,
-                             k_bits=d.k_bits, h_out=d.h_out, ob=ob_eff,
-                             interpret=interpret)
+    y = _k.dequant_kernel(dp.idx, dp.codes, s, z, h_g=d.h_g, keep=d.keep,
+                          k_bits=d.k_bits, h_out=dp.h_out, ob=ob_eff,
+                          kc=t["kc"], interpret=interpret)
+    return y[:, :d.h_out]
+
+
+def segment_decode_tiles(seg_offsets, *, n_groups: int, h_out: int,
+                         tb: int, ob: int) -> int:
+    """Decode-tile work the segments kernel executes for one step.
+
+    Counts (segment, row-block, column-tile, group) grid points whose
+    ``pl.when`` guard fires — i.e. how many [h_g, Ob] tiles are actually
+    dequantized. The vmapped per-row kernel decodes
+    ``B * n_groups * ceil(h_out / ob)`` tiles regardless of duplication;
+    the segments kernel decodes per *unique* tenant per overlapped row
+    block. This is the deterministic accounting behind the
+    "segments beats per-row on duplicate-tenant batches" invariant
+    (kernel_bench gates on it; wall-clock on CPU interpret mode is too
+    noisy to gate)."""
+    import numpy as np
+    offs = np.asarray(seg_offsets)
+    col_tiles = -(-h_out // ob)
+    total = 0
+    T = int(offs[-1])
+    for s in range(len(offs) - 1):
+        start, end = int(offs[s]), int(offs[s + 1])
+        if end <= start:
+            continue
+        for row0 in range(0, T, tb):
+            if start < row0 + tb and end > row0:
+                total += n_groups * col_tiles
+    return total
+
+
+def per_row_decode_tiles(batch: int, *, n_groups: int, h_out: int,
+                         ob: int) -> int:
+    """Decode-tile work of the vmapped per-row kernel (T=1 rows)."""
+    return batch * n_groups * (-(-h_out // ob))
 
 
 def _pow2_floor(n: int) -> int:
@@ -192,8 +388,8 @@ def _pow2_floor(n: int) -> int:
     return p
 
 
-def _largest_divisor_tile(n: int, cap: int) -> int:
-    for t in range(min(cap, n), 0, -1):
-        if n % t == 0:
-            return t
-    return 1
+def _pow2_ceil(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p

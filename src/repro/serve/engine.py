@@ -50,6 +50,7 @@ from repro.serve.scheduler import (
     RequestQueue,
     Scheduler,
     SlotState,
+    tenant_segments,
 )
 from repro.utils import tree_bytes
 
@@ -147,13 +148,24 @@ class ContinuousEngine:
     def __init__(self, cfg: ArchConfig, base_params: Any, *,
                  n_slots: int = 8, max_seq: int = 256, min_bucket: int = 8,
                  store: Optional[DeltaStore] = None, clock=time.monotonic,
-                 mesh=None):
+                 mesh=None, slot_dispatch: str = "segments",
+                 shard_deltas: str = "auto"):
         if cfg.family in ("encdec", "vlm"):
             raise ValueError(
                 f"continuous batching does not support family={cfg.family!r} "
                 "(per-request encoder inputs); use Engine.generate")
         self.cfg = cfg
         self.mesh = mesh
+        # "segments": unique-tenant decode dispatch (each distinct delta
+        # dequantized once per step); "per_row": the legacy per-row
+        # gather path, kept as the behavioral fallback.
+        assert slot_dispatch in ("segments", "per_row"), slot_dispatch
+        self.slot_dispatch = slot_dispatch
+        # "auto": stacked tenant deltas shard their output-column axis
+        # over `model` when it divides (delta_shardings(shard_output=True)),
+        # replicated otherwise; "replicated": always replicate.
+        assert shard_deltas in ("auto", "replicated"), shard_deltas
+        self.shard_deltas = shard_deltas
         cache_sh = None
         if mesh is not None:
             # Sharded serving: base weights tensor-parallel over `model`,
@@ -253,11 +265,24 @@ class ContinuousEngine:
                 [self._zero_tree] + [t.deltas for t in tenants])
             self._rows = {t.name: i + 1 for i, t in enumerate(tenants)}
             if self.mesh is not None:
-                # compressed deltas are tiny: replicate them across the
-                # mesh once, at registration, not on every decode step
-                from repro.launch.mesh import replicate
-                self._stacked = replicate(self._stacked, self.mesh)
-                self._zero_tree = replicate(self._zero_tree, self.mesh)
+                # compressed deltas are tiny: place them across the mesh
+                # once, at registration, not on every decode step. The
+                # stacked dispatch tree shards its output-column axis
+                # over `model` where it divides (each shard then holds
+                # only its slice of the compressed bytes — the layout
+                # the shard_map'd correction consumes natively);
+                # delta_shardings falls back to replicated per leaf.
+                from repro.launch import mesh as mesh_lib
+                if self.shard_deltas == "auto":
+                    self._stacked = mesh_lib.shard_tree(
+                        self._stacked,
+                        mesh_lib.delta_shardings(self._stacked, self.mesh,
+                                                 shard_output=True))
+                else:
+                    self._stacked = mesh_lib.replicate(self._stacked,
+                                                       self.mesh)
+                self._zero_tree = mesh_lib.replicate(self._zero_tree,
+                                                     self.mesh)
         # registration is append-only so rows never shift — but a live
         # unregister would remap rows under in-flight sequences, silently
         # decoding them with another tenant's delta. Refuse instead.
@@ -300,12 +325,14 @@ class ContinuousEngine:
         return self.clock() - self._t0
 
     def _install_mesh(self) -> None:
-        """Install THIS engine's mesh (or None) as the process-global
-        apply-mode before any call that may trace — engines with and
-        without a mesh can then coexist in one process (each jit traces
-        at most once per shape, under its owner's mesh)."""
-        from repro.core.apply import set_mesh
+        """Install THIS engine's mesh (or None) and slot-dispatch mode as
+        the process-global apply-mode before any call that may trace —
+        engines with different modes can then coexist in one process
+        (each jit traces at most once per shape, under its owner's
+        modes)."""
+        from repro.core.apply import set_mesh, set_slot_dispatch
         set_mesh(self.mesh)
+        set_slot_dispatch(self.slot_dispatch)
 
     def _prefill_into(self, slot: int, req: Request, now: float) -> None:
         self._install_mesh()
@@ -351,6 +378,9 @@ class ContinuousEngine:
         self.metrics.record_done(req.tenant, now - req.arrival)
         self.sched.release(slot)
         self.kv.release(slot)
+        # park the freed slot on tenant row 0 so stale rows don't inflate
+        # the unique-tenant segment count of subsequent decode steps
+        self._row[slot] = 0
 
     def _decode_all(self, now: float) -> None:
         active = self.sched.active_slots()
@@ -360,7 +390,14 @@ class ContinuousEngine:
         self._refresh_stacked()
         sd = None
         if self._stacked is not None:
-            sd = wrap_slot_deltas(self._stacked, jnp.asarray(self._row))
+            seg = None
+            if self.slot_dispatch == "segments":
+                # host-side layout: rows grouped by tenant, static [B]
+                # shapes — the decode jit still compiles exactly once
+                seg = tenant_segments(self._row)
+                seg = jax.tree.map(jnp.asarray, seg)
+            sd = wrap_slot_deltas(self._stacked, jnp.asarray(self._row),
+                                  segments=seg)
         nxt, new_cache = self._decode(
             self.base, self.kv.cache, jnp.asarray(self._tok[:, None]),
             jnp.asarray(self._pos), sd)

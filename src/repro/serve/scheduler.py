@@ -148,6 +148,34 @@ class LengthBuckets:
 
 
 # ---------------------------------------------------------------------------
+# Tenant-segment layout (unique-tenant decode dispatch)
+# ---------------------------------------------------------------------------
+def tenant_segments(rows: np.ndarray):
+    """Build the static-shape tenant-segment layout for one decode step.
+
+    ``rows`` int [B] is the per-slot tenant row (0 = base/zero delta).
+    Returns a :class:`repro.core.apply.TenantSegments` of numpy arrays:
+    batch rows stably sorted by tenant so each unique tenant occupies
+    one contiguous segment; segment arrays are padded to B entries
+    (empty segments carry ``seg_offsets[s] == seg_offsets[s+1]`` and
+    tenant row 0) so every decode step shares ONE jit shape regardless
+    of how many distinct tenants happen to share the batch.
+    """
+    from repro.core.apply import TenantSegments
+    rows = np.asarray(rows, np.int32)
+    B = rows.shape[0]
+    order = np.argsort(rows, kind="stable").astype(np.int32)
+    inv_order = np.argsort(order, kind="stable").astype(np.int32)
+    uniq, starts = np.unique(rows[order], return_index=True)
+    seg_rows = np.zeros(B, np.int32)
+    seg_rows[:len(uniq)] = uniq
+    seg_offsets = np.full(B + 1, B, np.int32)
+    seg_offsets[:len(uniq)] = starts
+    return TenantSegments(order=order, inv_order=inv_order,
+                          seg_rows=seg_rows, seg_offsets=seg_offsets)
+
+
+# ---------------------------------------------------------------------------
 # Slot table
 # ---------------------------------------------------------------------------
 @dataclass

@@ -1,0 +1,110 @@
+"""Autotune table: lookup semantics, persistence round-trip, ops consult."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import groupwise_dropout_pack
+from repro.kernels import autotune, ops, ref
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    autotune.invalidate_cache()
+    yield
+    autotune.invalidate_cache()
+
+
+def test_lookup_defaults_without_table(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_TABLE", str(tmp_path / "missing.json"))
+    got = autotune.lookup(64, 8, 4, 128, 256)
+    assert got == autotune.DEFAULTS
+
+
+def test_lookup_merges_partial_entry(tmp_path, monkeypatch):
+    path = tmp_path / "table.json"
+    key = autotune.envelope_key(64, 8, 4, 128, 256)
+    path.write_text(json.dumps(
+        {"version": 2, "entries": {key: {"gather_max_t": 32}}}))
+    monkeypatch.setenv("REPRO_AUTOTUNE_TABLE", str(path))
+    got = autotune.lookup(64, 8, 4, 128, 256)
+    assert got["gather_max_t"] == 32
+    assert got["tb"] == autotune.DEFAULTS["tb"]       # filled from defaults
+    # unknown envelope point -> pure defaults
+    assert autotune.lookup(16, 2, 1, 32, 64) == autotune.DEFAULTS
+
+
+def test_envelope_key_none_bits():
+    assert autotune.envelope_key(16, 2, None, 64, 128) == "16/2/None/64/128"
+
+
+def test_corrupt_table_falls_back(tmp_path, monkeypatch):
+    path = tmp_path / "bad.json"
+    path.write_text("{not json")
+    monkeypatch.setenv("REPRO_AUTOTUNE_TABLE", str(path))
+    assert autotune.lookup(64, 8, 4, 128, 256) == autotune.DEFAULTS
+
+
+def test_committed_table_loads():
+    """The checked-in table must parse and yield complete entries."""
+    assert os.path.exists(autotune.DEFAULT_TABLE_PATH), \
+        "results/autotune_kernels.json missing (regenerate with " \
+        "python -m repro.kernels.autotune)"
+    entries = autotune.load_table(autotune.DEFAULT_TABLE_PATH)
+    assert entries, "committed autotune table has no entries"
+    for key, entry in entries.items():
+        got = {**autotune.DEFAULTS, **entry}
+        assert set(got) >= set(autotune.DEFAULTS), key
+
+
+def test_ops_respects_tuned_tiles(tmp_path, monkeypatch):
+    """A tuned (tb, ob) must flow into the kernel launch and still be
+    numerically correct (padding handles non-divisible tiles)."""
+    rng = jax.random.PRNGKey(0)
+    delta = jax.random.normal(rng, (128, 192)) * 0.01
+    p = groupwise_dropout_pack(rng, delta, h_g=64, alpha=8, k_bits=4)
+    path = tmp_path / "table.json"
+    key = autotune.envelope_key(p.h_g, p.keep, p.k_bits, p.h_in, p.h_out)
+    path.write_text(json.dumps(
+        {"version": 2,
+         "entries": {key: {"tb": 32, "ob": 64, "kc": 4,
+                           "gather_max_t": 4}}}))
+    monkeypatch.setenv("REPRO_AUTOTUNE_TABLE", str(path))
+    autotune.invalidate_cache()
+    x = jax.random.normal(jax.random.PRNGKey(1), (48, 128))
+    got = ops.delta_spmm(x, p, interpret=True)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.delta_spmm_ref(x, p)),
+                               atol=1e-4, rtol=1e-4)
+    # explicit arguments override the table
+    got2 = ops.delta_spmm(x, p, tb=16, ob=192, interpret=True)
+    np.testing.assert_allclose(np.asarray(got2),
+                               np.asarray(ref.delta_spmm_ref(x, p)),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_col_tile_prefers_divisors():
+    """Benign non-divisible h_out runs unpadded on a divisor tile (the
+    fused kernel would otherwise copy-pad the whole base matrix); only
+    prime-ish h_out falls back to pad-to-pow2."""
+    from repro.kernels.ops import _col_tile
+    assert _col_tile(256, 128) == 128     # divides: use the tuned tile
+    assert _col_tile(96, 128) == 96       # divisor tile, no padding
+    assert _col_tile(40, 64) == 40
+    assert _col_tile(192, 128) == 96      # largest divisor <= cap
+    assert 251 % _col_tile(251, 128) != 0  # prime: pad-and-slice path
+    assert _col_tile(251, 128) >= 32
+
+
+def test_decode_tile_accounting():
+    """Unique-tenant dedup in numbers: dup batches decode fewer tiles."""
+    from repro.serve.scheduler import tenant_segments
+    dup = tenant_segments(np.array([1, 1, 1, 2, 1, 1, 2, 1], np.int32))
+    distinct = tenant_segments(np.arange(1, 9).astype(np.int32))
+    kw = dict(n_groups=2, h_out=256, tb=8, ob=128)
+    per_row = ops.per_row_decode_tiles(8, n_groups=2, h_out=256, ob=128)
+    assert ops.segment_decode_tiles(dup.seg_offsets, **kw) == per_row // 4
+    assert ops.segment_decode_tiles(distinct.seg_offsets, **kw) == per_row

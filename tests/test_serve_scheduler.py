@@ -234,6 +234,46 @@ def test_mixed_stream_token_identical_and_bounded_compiles(dense_setup):
         assert t["requests"] >= 1 and t["ttft_p50"] is not None
 
 
+def test_per_row_dispatch_token_identical(dense_setup):
+    """The legacy per-row dispatch (behind the slot_dispatch flag) must
+    produce the exact same tokens as the default segment dispatch and
+    the per-tenant reference engine."""
+    cfg, base, tenants = dense_setup
+    ref = Engine(cfg, base, max_seq=32)
+    engines = {
+        mode: ContinuousEngine(cfg, base, n_slots=3, max_seq=32,
+                               clock=VirtualClock(tick=1e-3),
+                               slot_dispatch=mode)
+        for mode in ("segments", "per_row")
+    }
+    for i, d in enumerate(tenants):
+        ref.register_tenant(f"t{i}", d)
+        for eng in engines.values():
+            eng.register_tenant(f"t{i}", d)
+
+    rng = jax.random.PRNGKey(11)
+    lengths = [5, 9, 7, 5, 3]
+    outs = {}
+    for mode, eng in engines.items():
+        reqs = []
+        for i, L in enumerate(lengths):
+            prompt = np.asarray(jax.random.randint(
+                jax.random.fold_in(rng, i), (L,), 0, cfg.vocab))
+            tenant = f"t{i % 3}" if i % 2 else None
+            reqs.append((tenant, prompt,
+                         eng.submit(tenant, prompt, max_new_tokens=5,
+                                    arrival=0.002 * i)))
+        eng.run()
+        outs[mode] = reqs
+
+    for (t_a, p_a, r_a), (t_b, p_b, r_b) in zip(outs["segments"],
+                                                outs["per_row"]):
+        np.testing.assert_array_equal(r_a.output(), r_b.output(),
+                                      err_msg=str(t_a))
+        want = ref.generate(t_a, p_a[None], max_new_tokens=5)[0]
+        np.testing.assert_array_equal(r_a.output(), want, err_msg=str(t_a))
+
+
 def test_eviction_never_drops_unfinished_randomized(dense_setup):
     """Slot pressure + random lengths/budgets: every request completes
     bit-exact; slots are only recycled after their sequence finishes."""
