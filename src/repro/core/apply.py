@@ -139,6 +139,18 @@ class TenantSegments:
       seg_rows    int32 [B]    tenant row per segment (padding rows 0)
       seg_offsets int32 [B+1]  half-open row ranges; empty segments have
                                equal offsets and are skipped at runtime
+
+    A :class:`ShardedTenantSegments` flattened with
+    ``global_order()``/``global_segments()`` is also a valid instance
+    of this layout: rows sorted by tenant only within each contiguous
+    shard pool, each pool contributing its own segment run (a tenant on
+    two shards gets two segments). Nothing downstream changes —
+    segments are consumed only as (tenant row, contiguous range) pairs,
+    so the same envelope and the same jit signature serve data=1 and
+    data=N — but because the permutation never crosses a pool boundary,
+    the sorted batch partitions over the mesh ``data`` axis exactly
+    like the slot rows, and every segment's work stays on the shard
+    hosting its rows.
     """
     order: jnp.ndarray
     inv_order: jnp.ndarray
@@ -156,6 +168,70 @@ class TenantSegments:
 
 @jax.tree_util.register_pytree_node_class
 @dataclass
+class ShardedTenantSegments:
+    """Per-data-shard tenant-segment layout (``data > 1`` decode).
+
+    Built host-side by ``serve.scheduler.tenant_segments_sharded`` from
+    the per-slot tenant rows: each contiguous shard pool of
+    B_s = B / D slots sorts its own rows by tenant and carries its own
+    (pool-local) segment list. All arrays are [D, B_s]-shaped — the
+    static global envelope — so one jit signature serves every step:
+
+      order       int32 [D, B_s]    pool-LOCAL row permutation
+      inv_order   int32 [D, B_s]    its inverse (also pool-local)
+      seg_rows    int32 [D, B_s]    tenant row per segment (padding 0)
+      seg_offsets int32 [D, B_s+1]  pool-local half-open ranges
+
+    The leading D axis partitions over the mesh ``data`` axis inside the
+    shard_map'd correction: each device shard receives exactly its
+    pool's rows and its pool's segment list, so it dequantizes only the
+    tenants it actually hosts. :meth:`global_order` /
+    :meth:`global_segments` flatten to the equivalent single-pool
+    layout (block-diagonal permutation, concatenated segment runs) for
+    the unsharded execution paths — bit-identical by construction.
+    """
+    order: jnp.ndarray
+    inv_order: jnp.ndarray
+    seg_rows: jnp.ndarray
+    seg_offsets: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.order, self.inv_order, self.seg_rows,
+                self.seg_offsets), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def data_shards(self) -> int:
+        return self.order.shape[0]
+
+    def global_order(self):
+        """Flatten to global [B] (order, inv_order). The permutation is
+        block-diagonal (never crosses a pool), so the global inverse is
+        the per-pool inverse shifted by each pool's base offset."""
+        D, Bs = self.order.shape
+        base = (jnp.arange(D, dtype=jnp.int32) * Bs)[:, None]
+        return ((jnp.asarray(self.order) + base).reshape(D * Bs),
+                (jnp.asarray(self.inv_order) + base).reshape(D * Bs))
+
+    def global_segments(self):
+        """Flatten to the global [B] seg_rows / [B+1] seg_offsets form
+        (each pool's padding segments collapse onto its end boundary, so
+        offsets stay monotone and segments never cross a pool)."""
+        D, Bs = self.seg_rows.shape
+        B = D * Bs
+        base = (jnp.arange(D, dtype=jnp.int32) * Bs)[:, None]
+        sr = jnp.asarray(self.seg_rows).reshape(B)
+        so = jnp.concatenate([
+            (jnp.asarray(self.seg_offsets)[:, :Bs] + base).reshape(B),
+            jnp.full((1,), B, jnp.int32)])
+        return sr, so
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
 class SlotDelta:
     """A tenant-stacked :class:`PackedDelta` plus per-batch-row tenant ids.
 
@@ -164,11 +240,13 @@ class SlotDelta:
     [T, *lead]. ``slots`` is int32 [B] mapping each batch row to a tenant
     row; row 0 is conventionally the zero delta (base model).
     ``segments`` (optional) carries the sorted tenant-segment layout
-    consumed by the unique-tenant dispatch.
+    consumed by the unique-tenant dispatch — either the single-pool
+    :class:`TenantSegments` or, for ``data > 1`` serving, the per-shard
+    :class:`ShardedTenantSegments`.
     """
     delta: PackedDelta
     slots: jnp.ndarray
-    segments: Optional[TenantSegments] = None
+    segments: Optional[Any] = None
 
     def tree_flatten(self):
         return (self.delta, self.slots, self.segments), None
@@ -198,9 +276,34 @@ class SlotDelta:
             d.h_in, d.h_out, d.h_g, d.keep, d.alpha, d.k_bits, d.m)
 
 
+def _row_sharded(t: jnp.ndarray) -> jnp.ndarray:
+    """Pin a [rows, ...] array's leading axis over the mesh ``data`` axis.
+
+    Used inside the segment dispatch when the active mesh has a ``data``
+    axis > 1: the slot-sorted batch (whose permutation never crosses a
+    shard-pool boundary — see TenantSegments) then partitions over
+    ``data`` like the KV slot rows do, so each shard's segment
+    corrections read and write only local rows. No-op without a mesh,
+    with data=1, or when the row count doesn't divide (batch-1 prefill).
+    """
+    if _MESH is None or _MESH.shape.get("data", 1) <= 1 \
+            or t.shape[0] % _MESH.shape["data"]:
+        return t
+    from jax.sharding import NamedSharding, PartitionSpec
+    spec = PartitionSpec(*(["data"] + [None] * (t.ndim - 1)))
+    return jax.lax.with_sharding_constraint(t, NamedSharding(_MESH, spec))
+
+
 def _segment_dispatch(x: jnp.ndarray, sd: SlotDelta) -> jnp.ndarray:
     """Unique-tenant correction: sort rows by tenant, dequantize each
-    unique delta once, apply per segment, unsort. x [B, ..., h_in]."""
+    unique delta once, apply per segment, unsort. x [B, ..., h_in].
+
+    With a :class:`ShardedTenantSegments` layout the mesh path hands the
+    per-shard [D, B_s] arrays straight to the shard_map'd correction
+    (each data shard processes its own pool's rows and segments); every
+    other path runs the flattened global-envelope equivalent, which is
+    the same permutation and the same per-row bits.
+    """
     seg = sd.segments
     d = sd.delta
     B = x.shape[0]
@@ -208,22 +311,28 @@ def _segment_dispatch(x: jnp.ndarray, sd: SlotDelta) -> jnp.ndarray:
     tokens_per_row = 1
     for n in lead:
         tokens_per_row *= n
-    xs = jnp.take(x, seg.order, axis=0)
-    x2 = xs.reshape(B * tokens_per_row, d.h_in)
-    # row ranges scale with the tokens folded out of each batch row
-    offs = seg.seg_offsets * tokens_per_row
+    sharded = isinstance(seg, ShardedTenantSegments)
+    order, inv_order = seg.global_order() if sharded \
+        else (seg.order, seg.inv_order)
+    xs = jnp.take(x, order, axis=0)
+    x2 = _row_sharded(xs.reshape(B * tokens_per_row, d.h_in))
+    y2 = None
     if _MESH is not None:
         from repro.kernels import ops
+        # ranges (pool-local [D, B_s+1] or global [B+1]) scale with the
+        # tokens folded out of each batch row; ops detects the per-shard
+        # form by its 2-D seg_rows
         y2 = ops.delta_correction_sharded(
             x2, d, _MESH, use_pallas=_USE_PALLAS,
-            segments=(seg.seg_rows, offs))
-        if y2 is None:
-            y2 = _segment_local(x2, d, seg.seg_rows, offs)
-    else:
-        y2 = _segment_local(x2, d, seg.seg_rows, offs)
+            segments=(seg.seg_rows, seg.seg_offsets * tokens_per_row))
+    if y2 is None:
+        sr, so = seg.global_segments() if sharded \
+            else (seg.seg_rows, seg.seg_offsets)
+        # row ranges scale with the tokens folded out of each batch row
+        y2 = _segment_local(x2, d, sr, so * tokens_per_row)
     # same dtype round-trip as every other path (no-op for f32)
     y = y2.reshape(B, *lead, d.h_out).astype(x.dtype)
-    return jnp.take(y, seg.inv_order, axis=0)
+    return jnp.take(y, inv_order, axis=0)
 
 
 def _segment_local(x2, d, seg_rows, seg_offsets):

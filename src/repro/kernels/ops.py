@@ -214,16 +214,22 @@ def delta_correction_sharded(x: jnp.ndarray, d: PackedDelta, mesh, *,
     matching ``x``'s leading dim (per-row mixed-tenant decode), or — with
     ``segments=(seg_rows, seg_offsets)`` — the tenant stack ``[R]``
     consumed by the unique-tenant dispatch (x rows pre-sorted by
-    tenant). The shard_map body computes its own h_out/n_model column
-    slice with the exact same local math as the single-device path
-    (Pallas kernel when ``use_pallas``, the gather/segment fallback
-    otherwise), so sharded serving is bit-identical to the replicated
-    engine: the contraction for every output element is unchanged, only
-    *which shard* produces the column differs.
+    tenant). Segment arrays may be the global ``[S]``/``[S+1]`` layout
+    or the per-data-shard ``[D, B_s]``/``[D, B_s+1]`` layout (detected
+    by ndim): the per-shard form additionally partitions x's rows over
+    the mesh ``data`` axis, so each (data, model) device computes its
+    own pool's rows for its own column slice — and dequantizes only the
+    tenants its pool hosts. The shard_map body computes its slice with
+    the exact same local math as the single-device path (Pallas kernel
+    when ``use_pallas``, the gather/segment fallback otherwise), so
+    sharded serving is bit-identical to the replicated engine: the
+    contraction for every output element is unchanged, only *which
+    shard* produces it differs.
 
     Returns None when the mesh/delta layout does not apply (no model
-    axis, h_out not divisible, unsupported stack shape) — the caller
-    falls back to the replicated path.
+    axis, h_out not divisible, unsupported stack shape, per-shard
+    layout not matching the mesh data axis) — the caller falls back to
+    the replicated path.
     """
     n = mesh.shape.get("model", 1) if mesh is not None else 1
     if n <= 1 or d.h_out % n:
@@ -248,10 +254,23 @@ def delta_correction_sharded(x: jnp.ndarray, d: PackedDelta, mesh, *,
         return PackedDelta(idx, codes, s, z, d.h_in, idx.shape[-1], d.h_g,
                            d.keep, d.alpha, d.k_bits, d.m)
 
+    # tiles and formulation decided on the GLOBAL envelope point (the
+    # local slice has a different h_out key: it must not flip the
+    # formulation — sharded and replicated serving would use different
+    # arithmetic — and has no swept autotune entry of its own). Hoisted
+    # above the segments branch: its kernel body needs kc too.
+    t_glob = _tiles(d, tb, ob, None)
+    tb, ob = t_glob["tb"], t_glob["ob"]
+    kc = t_glob["kc"]
+
     if segments is not None:
         seg_rows, seg_offsets = segments
+        seg_rows = jnp.asarray(seg_rows, jnp.int32)
+        seg_offsets = jnp.asarray(seg_offsets, jnp.int32)
 
         def body_seg(xb, idx, codes, s, z, sr, so):
+            if sr.ndim == 2:               # per-shard block: [1, B_s(+1)]
+                sr, so = sr[0], so[0]
             dl = local_delta(idx, codes, s, z)
             if use_pallas:
                 return delta_spmm_segments(xb, dl, sr, so, tb=tb, ob=ob,
@@ -261,23 +280,30 @@ def delta_correction_sharded(x: jnp.ndarray, d: PackedDelta, mesh, *,
         # NOTE: dtype round-trip happens in the caller (apply.py) for the
         # segments path; the body stays f32 like its local fallback.
 
-        fn = shard_map(body_seg, mesh=mesh,
-                       in_specs=(repl(x.ndim), last_model(d.idx.ndim),
-                                 last_model(d.codes.ndim), repl(scale.ndim),
-                                 repl(zero.ndim), repl(1), repl(1)),
-                       out_specs=last_model(x.ndim),
-                       check_rep=False)
-        return fn(x, d.idx, d.codes, scale, zero,
-                  jnp.asarray(seg_rows, jnp.int32),
-                  jnp.asarray(seg_offsets, jnp.int32))
-
-    # tiles and formulation decided on the GLOBAL envelope point (the
-    # local slice has a different h_out key: it must not flip the
-    # formulation — sharded and replicated serving would use different
-    # arithmetic — and has no swept autotune entry of its own)
-    t_glob = _tiles(d, tb, ob, None)
-    tb, ob = t_glob["tb"], t_glob["ob"]
-    kc = t_glob["kc"]
+        if seg_rows.ndim == 2:
+            # per-data-shard layout: rows partition over `data`, each
+            # shard consumes its own pool-local segment block
+            n_data = mesh.shape.get("data", 1)
+            if seg_rows.shape[0] != n_data or x.shape[0] % n_data:
+                return None
+            fn = shard_map(body_seg, mesh=mesh,
+                           in_specs=(P(*(["data"] + [None] * (x.ndim - 1))),
+                                     last_model(d.idx.ndim),
+                                     last_model(d.codes.ndim),
+                                     repl(scale.ndim), repl(zero.ndim),
+                                     P("data", None), P("data", None)),
+                           out_specs=P(*(["data"] + [None] * (x.ndim - 2)
+                                         + ["model"])),
+                           check_rep=False)
+        else:
+            fn = shard_map(body_seg, mesh=mesh,
+                           in_specs=(repl(x.ndim), last_model(d.idx.ndim),
+                                     last_model(d.codes.ndim),
+                                     repl(scale.ndim), repl(zero.ndim),
+                                     repl(1), repl(1)),
+                           out_specs=last_model(x.ndim),
+                           check_rep=False)
+        return fn(x, d.idx, d.codes, scale, zero, seg_rows, seg_offsets)
     gather_max_t = t_glob["gather_max_t"]
 
     def body(xb, idx, codes, s, z):

@@ -54,8 +54,11 @@ def make_serving_mesh(devices: Optional[int] = None, *, data: int = 1):
     """(data, model) mesh over ``devices`` local devices (default: all).
 
     Serving wants the model axis as large as possible (the base is the
-    footprint); ``data`` stays 1 unless the deployment replicates whole
-    model shards for throughput.
+    footprint); ``data > 1`` replicates the model shards for decode
+    throughput: KV slot rows shard over ``data`` in contiguous pools
+    and the engine's scheduler balances per-pool occupancy
+    (``ContinuousEngine(mesh=make_serving_mesh(n, data=d))``;
+    ``launch.serve --devices n --data d``).
     """
     n = len(jax.devices()) if devices is None else devices
     avail = len(jax.devices())

@@ -72,17 +72,31 @@ def main():
                          "a single-device engine in this process and fail "
                          "unless every request's tokens match exactly")
     ap.add_argument("--devices", type=int, default=1,
-                    help="shard the base model over N devices ((1, N) mesh; "
-                         "on CPU set XLA_FLAGS=--xla_force_host_platform_"
-                         "device_count=N before launch)")
+                    help="shard the base model over N devices ((data, "
+                         "N/data) mesh; on CPU set XLA_FLAGS=--xla_force_"
+                         "host_platform_device_count=N before launch)")
+    ap.add_argument("--data", type=int, default=1,
+                    help="data-axis extent of the serving mesh: slot rows "
+                         "split into `data` contiguous shard pools with "
+                         "occupancy-balanced admission (requires --devices "
+                         "divisible by data and --slots divisible by data)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
+    if args.data > 1 and args.devices % args.data:
+        raise SystemExit(f"--devices {args.devices} must be a multiple of "
+                         f"--data {args.data}")
+    if args.data > 1 and args.slots % args.data:
+        raise SystemExit(f"--slots {args.slots} must be a multiple of "
+                         f"--data {args.data} (equal shard pools)")
     mesh = None
     if args.devices > 1:
         from repro.launch.mesh import make_serving_mesh
-        mesh = make_serving_mesh(args.devices)
+        mesh = make_serving_mesh(args.devices, data=args.data)
         print(f"mesh: {dict(mesh.shape)}", flush=True)
+    elif args.data > 1:
+        raise SystemExit("--data > 1 requires --devices > 1 (the shard "
+                         "pools mirror the mesh data axis)")
     rng = jax.random.PRNGKey(0)
     base = lm.init_params(cfg, rng)
     tenants = synth_tenants(cfg, base, args.tenants, RATIO_SPECS[args.ratio],
@@ -111,7 +125,9 @@ def main():
         if mesh is None:
             raise SystemExit("--check-identity requires --devices N > 1 "
                              "(nothing to compare against otherwise)")
-        # single-device reference FIRST (its jits trace without the mesh)
+        # single-device reference FIRST (its jits trace without the mesh).
+        # With --data N this is also the data=1 reference: the identity
+        # contract covers both mesh-vs-none and dataN-vs-data1 at once.
         _, ref_reqs, _ = serve_stream(None)
 
     for name, _, report in tenants:
@@ -138,15 +154,31 @@ def main():
     if args.json:
         print(json.dumps(rep, indent=2))
     else:
+        # occupancy (and, with a zero-width wall clock, tokens/sec) is
+        # None when no decode step ran — e.g. --max-new 1, where every
+        # request finishes on its prefill-produced first token
+        tps = "n/a" if rep["tokens_per_sec"] is None \
+            else f"{rep['tokens_per_sec']:.0f}"
+        occ = "n/a" if rep["batch_occupancy"] is None \
+            else f"{rep['batch_occupancy']:.2f}"
         print(f"served {len(reqs)} requests / {rep['total_tokens']} tokens in "
               f"{rep['wall_time_s']:.2f}s "
-              f"({rep['tokens_per_sec']:.0f} tok/s, "
-              f"occupancy {rep['batch_occupancy']:.2f}, "
+              f"({tps} tok/s, occupancy {occ}, "
               f"{len(eng.prefill_shapes)} prefill shapes)")
         for name, t in rep["tenants"].items():
             print(f"  {name}: {t['requests']} reqs, {t['tokens']} toks, "
                   f"ttft p50 {1e3 * t['ttft_p50']:.0f}ms "
                   f"latency p95 {1e3 * t['latency_p95']:.0f}ms")
+        if rep.get("shards"):
+            for s in rep["shards"]:
+                # occupancy is None when no decode step ran (e.g. every
+                # request finished on its prefill token with --max-new 1)
+                occ = "n/a" if s["occupancy"] is None \
+                    else f"{s['occupancy']:.2f}"
+                print(f"  data shard {s['shard']} (slots "
+                      f"{s['slots'][0]}..{s['slots'][1] - 1}): "
+                      f"occupancy {occ}, {s['tokens']} toks")
+            print(f"  max step imbalance: {rep['shard_imbalance_max']}")
 
     store = eng.store
     base_bytes = tree_bytes(base)

@@ -14,6 +14,8 @@ from repro.serve.scheduler import (
     Scheduler,
     SlotState,
     VirtualClock,
+    tenant_segments,
+    tenant_segments_sharded,
 )
 
 __all__ = [
@@ -31,4 +33,6 @@ __all__ = [
     "TenantStats",
     "VirtualClock",
     "mask_after_stop",
+    "tenant_segments",
+    "tenant_segments_sharded",
 ]

@@ -51,6 +51,7 @@ from repro.serve.scheduler import (
     Scheduler,
     SlotState,
     tenant_segments,
+    tenant_segments_sharded,
 )
 from repro.utils import tree_bytes
 
@@ -143,12 +144,20 @@ class ContinuousEngine:
     (serve/README.md §Mesh serving). Engines with different meshes (or
     none) can coexist in one process; each installs its own mesh before
     stepping.
+
+    ``data=`` (defaulting to the mesh's ``data`` axis extent) splits the
+    slot rows into contiguous per-data-shard pools: admission balances
+    per-shard occupancy, the decode-step tenant-segment layout is built
+    per shard, and KV slot rows live on the shard that admitted them —
+    token-identical to ``data=1`` on the same trace (serve/README.md
+    §Data-parallel admission).
     """
 
     def __init__(self, cfg: ArchConfig, base_params: Any, *,
                  n_slots: int = 8, max_seq: int = 256, min_bucket: int = 8,
                  store: Optional[DeltaStore] = None, clock=time.monotonic,
-                 mesh=None, slot_dispatch: str = "segments",
+                 mesh=None, data: Optional[int] = None,
+                 slot_dispatch: str = "segments",
                  shard_deltas: str = "auto"):
         if cfg.family in ("encdec", "vlm"):
             raise ValueError(
@@ -156,6 +165,24 @@ class ContinuousEngine:
                 "(per-request encoder inputs); use Engine.generate")
         self.cfg = cfg
         self.mesh = mesh
+        # data-parallel slot sharding: slot rows split into `data`
+        # contiguous shard pools (mesh `data` axis when a mesh is
+        # given; a host-side policy shard otherwise — useful for
+        # testing the scheduler without devices). Defaults to the
+        # mesh's data extent so `mesh=make_serving_mesh(8, data=2)`
+        # is sharded end to end with no second knob.
+        mesh_data = mesh.shape.get("data", 1) if mesh is not None else 1
+        if data is None:
+            data = mesh_data
+        if mesh is not None and data != mesh_data:
+            raise ValueError(
+                f"data={data} does not match the mesh's data axis "
+                f"({mesh_data}); slot pools must mirror the device shards")
+        if data < 1 or n_slots % data:
+            raise ValueError(
+                f"n_slots={n_slots} must be a positive multiple of "
+                f"data={data} (equal contiguous shard pools)")
+        self.data = data
         # "segments": unique-tenant decode dispatch (each distinct delta
         # dequantized once per step); "per_row": the legacy per-row
         # gather path, kept as the behavioral fallback.
@@ -189,9 +216,10 @@ class ContinuousEngine:
         self.buckets = LengthBuckets(min_bucket=min_bucket,
                                      max_bucket=max_seq, exact=exact)
         self.queue = RequestQueue()
-        self.sched = Scheduler(n_slots, self.buckets)
-        self.kv = SlotKVCache(cfg, n_slots, max_seq, shardings=cache_sh)
-        self.metrics = Metrics(n_slots)
+        self.sched = Scheduler(n_slots, self.buckets, data_shards=data)
+        self.kv = SlotKVCache(cfg, n_slots, max_seq, shardings=cache_sh,
+                              data_shards=data)
+        self.metrics = Metrics(n_slots, data_shards=data)
         self.clock = clock
 
         # host mirrors of per-slot decode state (row 0 = zero delta / base)
@@ -360,6 +388,8 @@ class ContinuousEngine:
         self.metrics.record_admit(req.tenant, now - req.arrival)
         self.metrics.record_first_token(req.tenant, t_first - req.arrival)
         self.metrics.record_token(req.tenant)
+        if self.data > 1:
+            self.metrics.record_shard_token(self.sched.shard_of(slot))
         req.t_first_token = t_first
         fin = req.emit(first)
 
@@ -392,9 +422,17 @@ class ContinuousEngine:
         if self._stacked is not None:
             seg = None
             if self.slot_dispatch == "segments":
-                # host-side layout: rows grouped by tenant, static [B]
-                # shapes — the decode jit still compiles exactly once
-                seg = tenant_segments(self._row)
+                # host-side layout: rows grouped by tenant, static
+                # shapes — the decode jit still compiles exactly once.
+                # With data>1 the per-shard [D, B_s] form is built
+                # instead: the sort stays within each shard pool and the
+                # shard_map'd correction hands every data shard its own
+                # pool's rows + segments, so each shard dequantizes only
+                # the tenants it actually hosts.
+                if self.data > 1:
+                    seg = tenant_segments_sharded(self._row, self.data)
+                else:
+                    seg = tenant_segments(self._row)
                 seg = jax.tree.map(jnp.asarray, seg)
             sd = wrap_slot_deltas(self._stacked, jnp.asarray(self._row),
                                   segments=seg)
@@ -404,7 +442,10 @@ class ContinuousEngine:
         self.kv.update(new_cache)
         nxt = np.asarray(nxt)
         t = self._now()
-        self.metrics.record_step(len(active))
+        self.metrics.record_step(
+            len(active),
+            shard_active=self.sched.shard_occupancy() if self.data > 1
+            else None)
         for slot in active:
             state = self.sched.slots[slot]
             req = state.request
@@ -415,6 +456,8 @@ class ContinuousEngine:
             state.pos = int(self._pos[slot])
             fin = req.emit(tok)
             self.metrics.record_token(req.tenant)
+            if self.data > 1:
+                self.metrics.record_shard_token(self.sched.shard_of(slot))
             if fin:
                 self._finish(slot, t)
 
@@ -454,7 +497,7 @@ class ContinuousEngine:
 
     def reset_metrics(self) -> None:
         """Fresh metrics collector (e.g. after jit warmup), same engine."""
-        self.metrics = Metrics(self.n_slots)
+        self.metrics = Metrics(self.n_slots, data_shards=self.data)
         self._t0 = None
 
     def serve(self, requests: List[tuple], max_new_tokens: int = 16) -> List[np.ndarray]:
@@ -469,11 +512,13 @@ class ContinuousEngine:
 # Static engine (reference path + compatibility shim)
 # ---------------------------------------------------------------------------
 class Engine:
-    def __init__(self, cfg: ArchConfig, base_params: Any, max_seq: int = 256):
+    def __init__(self, cfg: ArchConfig, base_params: Any, max_seq: int = 256,
+                 clock=time.monotonic):
         self.cfg = cfg
         self.base = base_params
         self.max_seq = max_seq
-        self.store = DeltaStore()
+        self.clock = clock           # forwarded to the serve_batch shim so
+        self.store = DeltaStore()    # tests can inject a VirtualClock
         self._prefill = jax.jit(lambda p, b, c, d: lm.prefill(cfg, p, b, c, deltas=d))
         self._decode = jax.jit(lambda p, c, t, pos, d: lm.decode_step(cfg, p, c, t, pos, deltas=d))
         self._cont: Optional[ContinuousEngine] = None
@@ -515,7 +560,7 @@ class Engine:
         if self._cont is None:
             self._cont = ContinuousEngine(
                 self.cfg, self.base, n_slots=8, max_seq=self.max_seq,
-                store=self.store)
+                store=self.store, clock=self.clock)
         return self._cont
 
     def serve_batch(self, requests: list[tuple[str, np.ndarray]],

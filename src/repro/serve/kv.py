@@ -30,14 +30,27 @@ class SlotKVCache:
     kv-heads, slot rows along ``data`` — and every insert/update is
     forced back onto it via ``out_shardings`` so mid-flight row writes
     never drift the layout.
+
+    ``data_shards`` mirrors the scheduler's contiguous shard pools:
+    slot ``i`` lives on data shard ``i // (n_slots / data_shards)``,
+    which under the serve cache layout is the device shard that
+    physically owns row ``i``. Inserts and releases are accounted per
+    pool (``n_free_shard``) and an insert is pinned to the owning shard
+    by construction — the jitted row write runs under ``out_shardings``,
+    so the freshly prefilled row lands on (only) the devices of the
+    shard whose pool the scheduler admitted into.
     """
 
     def __init__(self, cfg: ArchConfig, n_slots: int, max_seq: int,
-                 enc_len: int = 0, shardings: Optional[Any] = None):
+                 enc_len: int = 0, shardings: Optional[Any] = None,
+                 data_shards: int = 1):
+        from repro.serve.scheduler import shard_pool_size
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_seq = max_seq
         self.shardings = shardings
+        self.data_shards = data_shards
+        self.shard_size = shard_pool_size(n_slots, data_shards)
         cache = lm.init_cache(cfg, n_slots, max_seq, enc_len=enc_len)
         if shardings is not None:
             from repro.launch.mesh import shard_tree
@@ -72,6 +85,18 @@ class SlotKVCache:
     @property
     def occupancy(self) -> float:
         return 1.0 - len(self._free) / self.n_slots
+
+    def shard_of(self, slot: int) -> int:
+        """Data shard owning ``slot`` (contiguous pools, scheduler layout)."""
+        return slot // self.shard_size
+
+    def n_free_shard(self, shard: int) -> int:
+        return sum(1 for s in self._free if self.shard_of(s) == shard)
+
+    def shard_occupancy(self) -> List[float]:
+        """Occupied fraction of each data shard's slot pool."""
+        return [1.0 - self.n_free_shard(s) / self.shard_size
+                for s in range(self.data_shards)]
 
     # -- device ops ---------------------------------------------------------
     def insert(self, slot: int, row_cache: Any) -> None:

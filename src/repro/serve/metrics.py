@@ -39,12 +39,24 @@ class TenantStats:
 
 
 class Metrics:
-    """Aggregates per-tenant and whole-engine serving statistics."""
+    """Aggregates per-tenant and whole-engine serving statistics.
 
-    def __init__(self, n_slots: int):
+    With ``data_shards > 1`` the engine also reports per-data-shard
+    occupancy and throughput (slot rows shard over the mesh ``data``
+    axis in contiguous pools; the balanced-admission policy is judged
+    by exactly these numbers).
+    """
+
+    def __init__(self, n_slots: int, data_shards: int = 1):
+        from repro.serve.scheduler import shard_pool_size
         self.n_slots = n_slots
+        self.data_shards = data_shards
+        self.shard_size = shard_pool_size(n_slots, data_shards)
         self.tenants: Dict[str, TenantStats] = {}
         self.step_active: List[int] = []     # active slots at each decode step
+        # per-shard active counts at each decode step, [steps][data_shards]
+        self.step_shard_active: List[List[int]] = []
+        self.shard_tokens: List[int] = [0] * data_shards
         self.n_decode_steps = 0
         self.n_prefills = 0
         self.t_start: Optional[float] = None
@@ -77,9 +89,21 @@ class Metrics:
     def record_done(self, tenant: Optional[str], latency: float) -> None:
         self._tenant(tenant).latencies.append(latency)
 
-    def record_step(self, n_active: int) -> None:
+    def record_step(self, n_active: int,
+                    shard_active: Optional[List[int]] = None) -> None:
         self.n_decode_steps += 1
         self.step_active.append(n_active)
+        if shard_active is not None:
+            if len(shard_active) != self.data_shards:
+                # ValueError (not assert): a ragged row must fail loudly
+                # even under python -O, not corrupt the step matrix
+                raise ValueError(
+                    f"shard_active has {len(shard_active)} entries for "
+                    f"{self.data_shards} data shards")
+            self.step_shard_active.append(list(shard_active))
+
+    def record_shard_token(self, shard: int, n: int = 1) -> None:
+        self.shard_tokens[shard] += n
 
     # -- reporting ----------------------------------------------------------
     @property
@@ -88,6 +112,32 @@ class Metrics:
             return None
         return float(np.mean(self.step_active)) / self.n_slots
 
+    def shard_report(self, wall: float) -> Optional[list]:
+        """Per-data-shard occupancy / throughput rows (None when data=1)."""
+        if self.data_shards <= 1:
+            return None
+        if self.step_shard_active:
+            per_step = np.asarray(self.step_shard_active, np.float64)
+            occ = (per_step.mean(axis=0) / self.shard_size).tolist()
+        else:
+            occ = [None] * self.data_shards
+        return [{
+            "shard": s,
+            "slots": [s * self.shard_size, (s + 1) * self.shard_size],
+            "occupancy": occ[s],
+            "tokens": self.shard_tokens[s],
+            "tokens_per_sec": self.shard_tokens[s] / wall if wall > 0 else None,
+        } for s in range(self.data_shards)]
+
+    @property
+    def shard_imbalance_max(self) -> Optional[int]:
+        """Max over decode steps of (most - least active shard). Balanced
+        admission keeps this small; decode-time finishes can widen it."""
+        if not self.step_shard_active:
+            return None
+        per_step = np.asarray(self.step_shard_active, np.int64)
+        return int(np.max(per_step.max(axis=1) - per_step.min(axis=1)))
+
     def report(self) -> dict:
         wall = 0.0
         if self.t_start is not None and self.t_end is not None:
@@ -95,6 +145,9 @@ class Metrics:
         total_tokens = sum(t.n_tokens for t in self.tenants.values())
         all_ttfts = [x for t in self.tenants.values() for x in t.ttfts]
         return {
+            "data_shards": self.data_shards,
+            "shards": self.shard_report(wall),
+            "shard_imbalance_max": self.shard_imbalance_max,
             "wall_time_s": wall,
             "n_slots": self.n_slots,
             "decode_steps": self.n_decode_steps,

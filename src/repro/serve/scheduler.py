@@ -19,6 +19,14 @@ Design points (serve/README.md has the full picture):
 * A slot is freed **only** when its sequence finishes (stop token or
   token budget). Unfinished sequences are never evicted; under slot
   pressure new requests simply wait in the queue.
+* With ``data_shards > 1`` the slot table is partitioned into
+  ``data_shards`` **contiguous shard pools** (slot rows shard over the
+  mesh ``data`` axis in the serve layout, so pool ``s`` is exactly the
+  rows device-shard ``s`` owns). Admission balances per-shard occupancy:
+  each request goes to the least-occupied shard with a free slot,
+  ties broken by the lowest slot id — placement is a pure function of
+  the slot table, so a replayed trace lands every request on the same
+  shard.
 """
 from __future__ import annotations
 
@@ -160,6 +168,11 @@ def tenant_segments(rows: np.ndarray):
     (empty segments carry ``seg_offsets[s] == seg_offsets[s+1]`` and
     tenant row 0) so every decode step shares ONE jit shape regardless
     of how many distinct tenants happen to share the batch.
+
+    For ``data > 1`` serving the engine uses
+    :func:`tenant_segments_sharded` instead (per-shard pools); its
+    ``global_segments()`` flattening is the single-pool equivalent of
+    this layout, so both forms share the decode jit signature.
     """
     from repro.core.apply import TenantSegments
     rows = np.asarray(rows, np.int32)
@@ -175,9 +188,65 @@ def tenant_segments(rows: np.ndarray):
                           seg_rows=seg_rows, seg_offsets=seg_offsets)
 
 
+def tenant_segments_sharded(rows: np.ndarray, data_shards: int):
+    """Per-data-shard tenant-segment layout for one decode step.
+
+    The ``data > 1`` companion of :func:`tenant_segments`: returns a
+    :class:`repro.core.apply.ShardedTenantSegments` of [D, B_s] /
+    [D, B_s+1] numpy arrays — each contiguous shard pool's own stable
+    sort, pool-LOCAL permutation and pool-local segment list. Rows sort
+    by tenant only *within* a pool (the permutation never crosses a
+    pool boundary, so the sorted batch partitions over the mesh
+    ``data`` axis exactly like the unsorted slot rows) and each pool
+    contributes its own segments — a tenant hosted by two shards gets
+    two segments, so each device shard dequantizes exactly the tenants
+    its pool hosts. This is the form the shard_map'd sharded
+    correction consumes natively; unsharded execution paths flatten it
+    with ``global_order()`` / ``global_segments()``.
+    """
+    from repro.core.apply import ShardedTenantSegments
+    rows = np.asarray(rows, np.int32)
+    B = rows.shape[0]
+    # ValueError (not assert): a bad split must fail loudly even under
+    # python -O, or np.empty garbage would flow into gather indices
+    per = shard_pool_size(B, data_shards)
+    order = np.empty((data_shards, per), np.int32)
+    inv_order = np.empty((data_shards, per), np.int32)
+    seg_rows = np.zeros((data_shards, per), np.int32)
+    seg_offsets = np.full((data_shards, per + 1), per, np.int32)
+    for s in range(data_shards):
+        pool = rows[s * per:(s + 1) * per]
+        local = np.argsort(pool, kind="stable").astype(np.int32)
+        order[s] = local
+        inv_order[s] = np.argsort(local, kind="stable")
+        uniq, starts = np.unique(pool[local], return_index=True)
+        seg_rows[s, :len(uniq)] = uniq
+        seg_offsets[s, :len(uniq)] = starts
+    return ShardedTenantSegments(order=order, inv_order=inv_order,
+                                 seg_rows=seg_rows, seg_offsets=seg_offsets)
+
+
 # ---------------------------------------------------------------------------
 # Slot table
 # ---------------------------------------------------------------------------
+def shard_pool_size(n_slots: int, data_shards: int) -> int:
+    """Validate the contiguous equal shard-pool partition and return the
+    pool size.
+
+    The ONE definition of the slot->shard mapping every serve component
+    (Scheduler, SlotKVCache, Metrics) derives from:
+    ``shard_of(slot) = slot // shard_pool_size(n_slots, data_shards)``.
+    Pool ``s`` is exactly the slot rows mesh data-shard ``s`` owns under
+    the serve cache layout (jax partitions an axis into contiguous equal
+    blocks), so host bookkeeping and device layout agree by construction.
+    """
+    if data_shards < 1 or n_slots % data_shards:
+        raise ValueError(
+            f"n_slots={n_slots} must be a positive multiple of "
+            f"data_shards={data_shards} (contiguous equal shard pools)")
+    return n_slots // data_shards
+
+
 @dataclass
 class SlotState:
     """Runtime state of one occupied decode slot."""
@@ -188,11 +257,20 @@ class SlotState:
 
 
 class Scheduler:
-    """Packs mixed-tenant requests into fixed decode slots."""
+    """Packs mixed-tenant requests into fixed decode slots.
 
-    def __init__(self, n_slots: int, buckets: LengthBuckets):
+    ``data_shards > 1`` partitions the ``n_slots`` slot rows into
+    contiguous shard pools of ``n_slots / data_shards`` (the rows each
+    mesh ``data`` shard owns in the serve cache layout) and admission
+    becomes occupancy-balanced across pools — see :meth:`admit`.
+    """
+
+    def __init__(self, n_slots: int, buckets: LengthBuckets,
+                 data_shards: int = 1):
         self.n_slots = n_slots
         self.buckets = buckets
+        self.data_shards = data_shards
+        self.shard_size = shard_pool_size(n_slots, data_shards)
         self.slots: List[Optional[SlotState]] = [None] * n_slots
 
     # -- introspection ------------------------------------------------------
@@ -206,14 +284,53 @@ class Scheduler:
     def n_active(self) -> int:
         return len(self.active_slots())
 
+    def shard_of(self, slot: int) -> int:
+        """Data shard owning ``slot`` (pools are contiguous slot ranges)."""
+        return slot // self.shard_size
+
+    def shard_slots(self, shard: int) -> range:
+        return range(shard * self.shard_size, (shard + 1) * self.shard_size)
+
+    def shard_occupancy(self) -> List[int]:
+        """Active-slot count per data shard."""
+        occ = [0] * self.data_shards
+        for i, s in enumerate(self.slots):
+            if s is not None:
+                occ[self.shard_of(i)] += 1
+        return occ
+
     # -- transitions --------------------------------------------------------
     def admit(self, queue: RequestQueue, now: float) -> List[tuple]:
-        """Fill free slots from the queue; returns [(slot, request)]."""
+        """Fill free slots from the queue; returns [(slot, request)].
+
+        Placement is **occupancy-balanced and deterministic**: each
+        popped request goes to the least-occupied shard pool that still
+        has a free slot (occupancy counts both active slots and slots
+        already claimed earlier in this round), ties broken by the
+        lowest slot id. The guarantees (pinned by the property tests):
+        on arrival-only traces per-shard occupancy never differs by
+        more than 1 after a round, and on any trace every shard that
+        admitted this round ends within 1 of the least-occupied shard.
+        (A shard left imbalanced by earlier finishes stays imbalanced
+        if the queue drains first — admission balances what it admits,
+        it does not migrate active sequences.) With data_shards=1 this
+        degrades to exactly the old lowest-free-slot-first policy.
+        """
+        occ = self.shard_occupancy()
+        # pool ranges ascend, so each free list is born sorted by slot id
+        free = [[i for i in self.shard_slots(s) if self.slots[i] is None]
+                for s in range(self.data_shards)]
         admitted = []
-        for slot in self.free_slots():
+        while True:
+            open_shards = [s for s in range(self.data_shards) if free[s]]
+            if not open_shards:
+                break
             req = queue.pop_ready(now)
             if req is None:
                 break
+            shard = min(open_shards, key=lambda s: (occ[s], free[s][0]))
+            slot = free[shard].pop(0)
+            occ[shard] += 1
             req.t_admitted = now
             admitted.append((slot, req))
         return admitted

@@ -1,4 +1,9 @@
-"""Serving-path tests: cache consistency, ring buffers, multi-tenant engine."""
+"""Serving-path tests: cache consistency, ring buffers, multi-tenant engine.
+
+Determinism: every random draw uses an explicitly seeded jax.random key
+and engine time is injected via VirtualClock — no wall clock or global
+RNG state reaches an assertion.
+"""
 import dataclasses
 
 import jax
@@ -9,7 +14,7 @@ import pytest
 from repro.configs import get_smoke_config, list_archs
 from repro.core import DeltaDQSpec, compress
 from repro.models import lm
-from repro.serve import Engine
+from repro.serve import Engine, VirtualClock
 
 FAST_ARCHS = ["llama3.2-1b", "gemma3-1b", "mamba2-370m", "recurrentgemma-9b",
               "seamless-m4t-medium", "llama-3.2-vision-11b", "wizard-llama2-7b"]
@@ -84,7 +89,9 @@ def test_engine_multi_tenant():
         lambda p: p + 0.05 * jax.random.normal(jax.random.PRNGKey(3), p.shape, jnp.float32).astype(p.dtype)
         if p.ndim >= 2 else p, base)
     deltas, report = compress(base, ft, DeltaDQSpec(alpha=2.0, k_bits=8, h_g=32))
-    eng = Engine(cfg, base, max_seq=32)
+    # VirtualClock: the serve_batch shim's continuous engine must not read
+    # wall-clock time in tests (deterministic metrics, reproducible runs)
+    eng = Engine(cfg, base, max_seq=32, clock=VirtualClock(tick=1e-3))
     eng.register_tenant("math", deltas, report)
 
     prompts = np.asarray(jax.random.randint(rng, (2, 8), 0, cfg.vocab))
