@@ -51,6 +51,10 @@ def set_use_pallas(flag: bool) -> None:
     _USE_PALLAS = flag
 
 
+def get_use_pallas() -> bool:
+    return _USE_PALLAS
+
+
 def set_slot_dispatch(mode: str) -> None:
     """Select the mixed-tenant decode dispatch: "segments" | "per_row"."""
     assert mode in ("segments", "per_row"), mode
@@ -243,13 +247,28 @@ class SlotDelta:
     consumed by the unique-tenant dispatch — either the single-pool
     :class:`TenantSegments` or, for ``data > 1`` serving, the per-shard
     :class:`ShardedTenantSegments`.
+
+    ``values``/``res_map`` (optional, only with ``segments``) carry the
+    pre-decoded delta residency tier (``serve.engine.DeltaResidency``):
+    ``values`` f32 [C, *lead, G, K, O] holds ``pack.decode_values``
+    output for C *resident* tenant rows, ``res_map`` int32 [T] maps a
+    tenant row to its residency row (rows the engine did not make
+    resident this step map to 0 and are never referenced by a live
+    segment). When present, the segment dispatch skips the per-step
+    code unpack and reads the decoded values directly; the packed
+    arrays still ride along for the index gather, and every path
+    without values decodes the codes as before (the always-correct
+    fallback).
     """
     delta: PackedDelta
     slots: jnp.ndarray
     segments: Optional[Any] = None
+    values: Optional[jnp.ndarray] = None
+    res_map: Optional[jnp.ndarray] = None
 
     def tree_flatten(self):
-        return (self.delta, self.slots, self.segments), None
+        return (self.delta, self.slots, self.segments, self.values,
+                self.res_map), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -263,7 +282,9 @@ class SlotDelta:
             d.scale[:, i] if jnp.ndim(d.scale) >= 2 else d.scale,
             d.zero[:, i] if jnp.ndim(d.zero) >= 2 else d.zero,
             d.h_in, d.h_out, d.h_g, d.keep, d.alpha, d.k_bits, d.m),
-            self.slots, self.segments)
+            self.slots, self.segments,
+            self.values[:, i] if self.values is not None else None,
+            self.res_map)
 
     def gather(self) -> PackedDelta:
         """Per-row delta: [B, G, K, O] gathered from the tenant stack."""
@@ -324,22 +345,26 @@ def _segment_dispatch(x: jnp.ndarray, sd: SlotDelta) -> jnp.ndarray:
         # form by its 2-D seg_rows
         y2 = ops.delta_correction_sharded(
             x2, d, _MESH, use_pallas=_USE_PALLAS,
-            segments=(seg.seg_rows, seg.seg_offsets * tokens_per_row))
+            segments=(seg.seg_rows, seg.seg_offsets * tokens_per_row),
+            values=sd.values, res_map=sd.res_map)
     if y2 is None:
         sr, so = seg.global_segments() if sharded \
             else (seg.seg_rows, seg.seg_offsets)
         # row ranges scale with the tokens folded out of each batch row
-        y2 = _segment_local(x2, d, sr, so * tokens_per_row)
+        y2 = _segment_local(x2, d, sr, so * tokens_per_row,
+                            sd.values, sd.res_map)
     # same dtype round-trip as every other path (no-op for f32)
     y = y2.reshape(B, *lead, d.h_out).astype(x.dtype)
     return jnp.take(y, inv_order, axis=0)
 
 
-def _segment_local(x2, d, seg_rows, seg_offsets):
+def _segment_local(x2, d, seg_rows, seg_offsets, values=None, res_map=None):
     from repro.kernels import fallback, ops
     if _USE_PALLAS:
-        return ops.delta_spmm_segments(x2, d, seg_rows, seg_offsets)
-    return fallback.segment_correction(x2, d, seg_rows, seg_offsets)
+        return ops.delta_spmm_segments(x2, d, seg_rows, seg_offsets,
+                                       values=values, res_map=res_map)
+    return fallback.segment_correction(x2, d, seg_rows, seg_offsets,
+                                       values=values, res_map=res_map)
 
 
 def slot_delta_matmul(x: jnp.ndarray, sd: SlotDelta) -> jnp.ndarray:
@@ -523,12 +548,20 @@ def stack_tenant_deltas(trees: list) -> Any:
 
 
 def wrap_slot_deltas(stacked: Any, slots: jnp.ndarray,
-                     segments: Optional[TenantSegments] = None) -> Any:
+                     segments: Optional[TenantSegments] = None,
+                     values: Any = None,
+                     res_map: Optional[jnp.ndarray] = None) -> Any:
     """Attach per-row tenant ids (and, optionally, the sorted tenant-
-    segment layout for unique-tenant dispatch) to every leaf of a
-    tenant-stacked tree."""
-    return jax.tree.map(lambda d: SlotDelta(d, slots, segments), stacked,
-                        is_leaf=_is_pd)
+    segment layout for unique-tenant dispatch, plus the pre-decoded
+    residency tier: ``values`` a tree of f32 buffers mirroring
+    ``stacked`` leaf-for-leaf and ``res_map`` the shared tenant-row ->
+    residency-row indirection) to every leaf of a tenant-stacked tree."""
+    if values is None:
+        return jax.tree.map(lambda d: SlotDelta(d, slots, segments), stacked,
+                            is_leaf=_is_pd)
+    return jax.tree.map(
+        lambda d, v: SlotDelta(d, slots, segments, v, res_map),
+        stacked, values, is_leaf=_is_pd)
 
 
 def merge_delta(params: Any, deltas: Any) -> Any:

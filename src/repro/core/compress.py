@@ -12,6 +12,7 @@ report so nothing is silently dropped.
 from __future__ import annotations
 
 import math
+import zlib
 from dataclasses import dataclass, field
 from typing import Any, Optional
 
@@ -20,7 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import quant
-from repro.core.dropout import groupwise_dropout_pack
+from repro.core.dropout import groupwise_dropout_pack, keep_count
 from repro.core.pack import PackedDelta
 from repro.utils import map_with_paths
 
@@ -83,12 +84,24 @@ class CompressionReport:
 def _pick_hg(h_in: int, spec: DeltaDQSpec) -> int:
     if spec.h_g is None:
         return h_in
-    # clamp to a divisor of h_in: largest power-of-two h_g' <= h_g dividing h_in
+    # clamp to a divisor of h_in: largest halving of h_g dividing h_in.
+    # Candidates below alpha are unsatisfiable (keep would round to 0 and
+    # halving only shrinks hg further), so detect that up front instead
+    # of walking to hg < 1 and raising a misleading divisibility error.
+    floor = max(spec.alpha, 1.0)
     hg = min(spec.h_g, h_in)
-    while h_in % hg or hg < spec.alpha:
+    if hg < floor:
+        raise ValueError(
+            f"unsatisfiable group size: requested h_g={spec.h_g} "
+            f"(clamped to {hg} for h_in={h_in}) is below alpha={spec.alpha}; "
+            f"every group must keep h_g/alpha >= 1 elements, so pick "
+            f"h_g >= alpha")
+    while h_in % hg:
         hg //= 2
-        if hg < 1:
-            raise ValueError(f"no valid group size <= {spec.h_g} for h_in={h_in}")
+        if hg < floor:
+            raise ValueError(
+                f"unsatisfiable group size: no halving of h_g={spec.h_g} "
+                f"both divides h_in={h_in} and stays >= alpha={spec.alpha}")
     return int(hg)
 
 
@@ -113,7 +126,12 @@ def compress(base_params: Any, ft_params: Any, spec: DeltaDQSpec,
             report.n_dense += 1
             report.skipped_paths.append(path)
             return None
-        leaf_rng = jax.random.fold_in(rng, hash(path) & 0x7FFFFFFF)
+        # stable digest, NOT hash(): str hashes are randomized by
+        # PYTHONHASHSEED, which made the "same" compression produce
+        # different deltas across processes — breaking checkpoint
+        # reproducibility and any cross-host identity contract
+        leaf_rng = jax.random.fold_in(
+            rng, zlib.crc32(path.encode("utf-8")) & 0x7FFFFFFF)
         d = compress_leaf(leaf_rng, b, f, spec)
         report.n_compressed += 1
         stack = int(np.prod(d.stack_shape())) if d.stack_shape() else 1
@@ -142,7 +160,9 @@ def delta_leaf_spec(leaf_spec, spec: DeltaDQSpec) -> PackedDelta:
     shape = leaf_spec.shape
     lead, (h_in, h_out) = shape[:-2], shape[-2:]
     hg = _pick_hg(h_in, spec)
-    keep = int(round(hg / spec.alpha))
+    # the same helper real packing uses (dropout._check): shape-only
+    # dry-run specs can never drift from what packing actually produces
+    keep = keep_count(hg, spec.alpha)
     G = h_in // hg
     idx_dtype = jnp.uint8 if hg <= 256 else jnp.int32
     if spec.k_bits is None:

@@ -21,13 +21,24 @@ from repro.core import quant
 from repro.core.pack import PackedDelta
 
 
-def _check(h_in: int, h_g: int, alpha: float):
-    if h_in % h_g:
-        raise ValueError(f"h_g={h_g} must divide h_in={h_in}")
+def keep_count(h_g: int, alpha: float) -> int:
+    """Kept elements per (group, column): the ONE definition.
+
+    Every consumer — real packing (:func:`groupwise_dropout_pack` via
+    ``_check``) and the shape-only dry-run twins
+    (``core.compress.delta_leaf_spec``) — derives ``keep`` here, so a
+    dry-run spec can never drift from what packing actually produces.
+    """
     keep = int(round(h_g / alpha))
     if keep < 1:
         raise ValueError(f"alpha={alpha} too large for h_g={h_g}")
     return keep
+
+
+def _check(h_in: int, h_g: int, alpha: float):
+    if h_in % h_g:
+        raise ValueError(f"h_g={h_g} must divide h_in={h_in}")
+    return keep_count(h_g, alpha)
 
 
 def groupwise_dropout_mask(rng, h_in: int, h_out: int, h_g: int, alpha: float) -> jnp.ndarray:

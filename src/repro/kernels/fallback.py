@@ -119,15 +119,25 @@ def _rows_core(x_rows: jnp.ndarray, gidx: jnp.ndarray,
     return (sel * vals).sum(axis=1)
 
 
-def gather_correction_rows(x: jnp.ndarray, d: PackedDelta) -> jnp.ndarray:
+def gather_correction_rows(x: jnp.ndarray, d: PackedDelta,
+                           values: Optional[jnp.ndarray] = None
+                           ) -> jnp.ndarray:
     """Per-row deltas: x [B, ..., h_in], d row-stacked [B] -> [B, ..., h_out].
 
     Peak extra memory is ``B * nnz`` floats (the gathered activations),
     not ``B * h_in * h_out`` — rows sharing a tenant no longer multiply a
     dense reconstruction.
+
+    ``values`` (optional f32 [B, G, K, O]) supplies pre-decoded kept
+    values and skips the in-graph code unpack — the residency fast
+    path. The decode is elementwise (``(q - z) * s`` after a bit
+    unpack), so values decoded ahead of time are bit-identical to
+    values decoded in-step, and the contraction below is unchanged —
+    which is what lets the residency tier keep the token-identity
+    contract.
     """
     B = x.shape[0]
-    vals = decode_values(d)                          # [B, G, K, O]
+    vals = decode_values(d) if values is None else values   # [B, G, K, O]
     _, G, K, O = vals.shape
     gidx = _flat_gather_idx(d, d.idx)                # [B, G, K, O]
     x2 = x.astype(jnp.float32).reshape(B, -1, d.h_in)
@@ -145,7 +155,9 @@ def gather_correction_rows(x: jnp.ndarray, d: PackedDelta) -> jnp.ndarray:
 
 def segment_correction(x2: jnp.ndarray, d: PackedDelta,
                        seg_rows: jnp.ndarray,
-                       seg_offsets: jnp.ndarray) -> jnp.ndarray:
+                       seg_offsets: jnp.ndarray,
+                       values: Optional[jnp.ndarray] = None,
+                       res_map: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Unique-tenant dispatch: x2 [T, h_in] rows sorted by tenant.
 
     ``d`` is the tenant-stacked packed delta [R, ...]; ``seg_rows`` [S]
@@ -156,13 +168,23 @@ def segment_correction(x2: jnp.ndarray, d: PackedDelta,
     :func:`_rows_core` the per-row path uses — identical gather/reduce
     shapes, identical bits.
 
+    ``values``/``res_map`` (optional) select the pre-decoded residency
+    tier: ``values`` f32 [C, G, K, O] holds decoded kept values for C
+    resident tenant rows and ``res_map`` int32 [R] maps tenant row ->
+    residency row. The per-step code unpack is skipped entirely — the
+    dequant happened once at promotion time with the same elementwise
+    math, so the bits entering :func:`_rows_core` are unchanged (the
+    residency tier preserves the token-identity contract).
+
     Note on CPU economics: XLA has no cross-row tile reuse, so the
-    unique-tenant *compute* dedup does not pay here — gathering f32
-    dequantized values per unique tenant costs more than re-unpacking
-    the (8x smaller) packed codes per row. This fallback therefore
-    matches the per-row path's work; the genuine dedup lives in the
-    Pallas segments kernel, which decodes each [h_g, Ob] VMEM tile once
-    per segment instead of once per row (gated by kernel_bench).
+    unique-tenant *compute* dedup does not pay here on the packed path —
+    gathering f32 dequantized values per unique tenant costs more than
+    re-unpacking the (8x smaller) packed codes per row. This fallback
+    therefore matches the per-row path's work; the genuine dedup lives
+    in (a) the Pallas segments kernel, which decodes each [h_g, Ob]
+    VMEM tile once per segment instead of once per row (gated by
+    kernel_bench), and (b) the residency values path above, which
+    removes the unpack from the step altogether.
     """
     T = x2.shape[0]
     # map each (sorted) row to its segment: count of segment ends <= row
@@ -174,4 +196,7 @@ def segment_correction(x2: jnp.ndarray, d: PackedDelta,
         jnp.asarray(d.scale, jnp.float32)[tenant_rows],
         jnp.asarray(d.zero, jnp.int32)[tenant_rows],
         d.h_in, d.h_out, d.h_g, d.keep, d.alpha, d.k_bits, d.m)
-    return gather_correction_rows(x2[:, None, :], dl)[:, 0]
+    vals = None
+    if values is not None:
+        vals = values[res_map[tenant_rows]]          # [T, G, K, O] f32
+    return gather_correction_rows(x2[:, None, :], dl, values=vals)[:, 0]

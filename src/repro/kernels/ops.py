@@ -159,6 +159,8 @@ def delta_spmm_slots(x: jnp.ndarray, d: PackedDelta, *,
 
 def delta_spmm_segments(x_sorted: jnp.ndarray, d: PackedDelta,
                         seg_rows: jnp.ndarray, seg_offsets: jnp.ndarray, *,
+                        values: Optional[jnp.ndarray] = None,
+                        res_map: Optional[jnp.ndarray] = None,
                         tb: Optional[int] = None, ob: Optional[int] = None,
                         kc: Optional[int] = None,
                         interpret: Optional[bool] = None) -> jnp.ndarray:
@@ -176,9 +178,19 @@ def delta_spmm_segments(x_sorted: jnp.ndarray, d: PackedDelta,
     Decode fast path: when the whole batch fits one row tile (the decode
     regime — T = n_slots), ``tb`` collapses to the padded batch size and
     the grid has a single row block, skipping the pad-to-pow2 dance.
+
+    ``values``/``res_map`` (pre-decoded residency tier) route to the
+    values-given XLA formulation: the Pallas segments kernel already
+    decodes each [h_g, Ob] VMEM tile once per segment, so the per-step
+    unpack the residency tier removes is the XLA/CPU host cost — a
+    values-consuming kernel variant is not worth a second TPU code
+    path. Packed-only (values=None) stays the always-correct fallback.
     """
     if interpret is None:
         interpret = _INTERPRET
+    if values is not None:
+        return fallback.segment_correction(x_sorted, d, seg_rows, seg_offsets,
+                                           values=values, res_map=res_map)
     probe = d.index(0)
     t = _tiles(probe, tb, ob, kc)
     if not kernel_supported(probe):
@@ -206,7 +218,9 @@ def delta_correction_sharded(x: jnp.ndarray, d: PackedDelta, mesh, *,
                              interpret: Optional[bool] = None,
                              tb: Optional[int] = None,
                              ob: Optional[int] = None,
-                             segments: Optional[tuple] = None
+                             segments: Optional[tuple] = None,
+                             values: Optional[jnp.ndarray] = None,
+                             res_map: Optional[jnp.ndarray] = None
                              ) -> Optional[jnp.ndarray]:
     """y = x · dequant(d), with d partitioned along output columns.
 
@@ -219,7 +233,11 @@ def delta_correction_sharded(x: jnp.ndarray, d: PackedDelta, mesh, *,
     by ndim): the per-shard form additionally partitions x's rows over
     the mesh ``data`` axis, so each (data, model) device computes its
     own pool's rows for its own column slice — and dequantizes only the
-    tenants its pool hosts. The shard_map body computes its slice with
+    tenants its pool hosts. With ``values``/``res_map`` (segments mode
+    only) the pre-decoded residency tier shards exactly like the codes
+    — values partition along their output-column axis, so each shard
+    reads only its slice of the decoded f32 bytes and skips the
+    per-step unpack. The shard_map body computes its slice with
     the exact same local math as the single-device path (Pallas kernel
     when ``use_pallas``, the gather/segment fallback otherwise), so
     sharded serving is bit-identical to the replicated engine: the
@@ -267,19 +285,27 @@ def delta_correction_sharded(x: jnp.ndarray, d: PackedDelta, mesh, *,
         seg_rows, seg_offsets = segments
         seg_rows = jnp.asarray(seg_rows, jnp.int32)
         seg_offsets = jnp.asarray(seg_offsets, jnp.int32)
+        have_values = values is not None
 
-        def body_seg(xb, idx, codes, s, z, sr, so):
+        def body_seg(xb, idx, codes, s, z, sr, so, *vr):
             if sr.ndim == 2:               # per-shard block: [1, B_s(+1)]
                 sr, so = sr[0], so[0]
+            v, rm = vr if vr else (None, None)
             dl = local_delta(idx, codes, s, z)
             if use_pallas:
-                return delta_spmm_segments(xb, dl, sr, so, tb=tb, ob=ob,
+                return delta_spmm_segments(xb, dl, sr, so, values=v,
+                                           res_map=rm, tb=tb, ob=ob,
                                            kc=kc, interpret=interpret)
-            return fallback.segment_correction(xb, dl, sr, so)
+            return fallback.segment_correction(xb, dl, sr, so, values=v,
+                                               res_map=rm)
 
         # NOTE: dtype round-trip happens in the caller (apply.py) for the
         # segments path; the body stays f32 like its local fallback.
 
+        # residency values shard their output-column axis with the codes
+        # (each shard reads only its decoded slice); res_map replicates
+        val_specs = (last_model(values.ndim), repl(1)) if have_values else ()
+        val_args = (values, res_map) if have_values else ()
         if seg_rows.ndim == 2:
             # per-data-shard layout: rows partition over `data`, each
             # shard consumes its own pool-local segment block
@@ -291,7 +317,8 @@ def delta_correction_sharded(x: jnp.ndarray, d: PackedDelta, mesh, *,
                                      last_model(d.idx.ndim),
                                      last_model(d.codes.ndim),
                                      repl(scale.ndim), repl(zero.ndim),
-                                     P("data", None), P("data", None)),
+                                     P("data", None), P("data", None),
+                                     *val_specs),
                            out_specs=P(*(["data"] + [None] * (x.ndim - 2)
                                          + ["model"])),
                            check_rep=False)
@@ -300,10 +327,11 @@ def delta_correction_sharded(x: jnp.ndarray, d: PackedDelta, mesh, *,
                            in_specs=(repl(x.ndim), last_model(d.idx.ndim),
                                      last_model(d.codes.ndim),
                                      repl(scale.ndim), repl(zero.ndim),
-                                     repl(1), repl(1)),
+                                     repl(1), repl(1), *val_specs),
                            out_specs=last_model(x.ndim),
                            check_rep=False)
-        return fn(x, d.idx, d.codes, scale, zero, seg_rows, seg_offsets)
+        return fn(x, d.idx, d.codes, scale, zero, seg_rows, seg_offsets,
+                  *val_args)
     gather_max_t = t_glob["gather_max_t"]
 
     def body(xb, idx, codes, s, z):

@@ -68,9 +68,12 @@ def main():
                          "inspection; cross-process diffs are not stable — "
                          "use --check-identity for the identity contract)")
     ap.add_argument("--check-identity", action="store_true",
-                    help="with --devices N>1: also serve the same stream on "
-                         "a single-device engine in this process and fail "
-                         "unless every request's tokens match exactly")
+                    help="also serve the same stream on a single-device "
+                         "DEFAULT-path engine (occupancy admission, packed "
+                         "deltas, no mesh) in this process and fail unless "
+                         "every request's tokens match exactly; needs "
+                         "--devices N>1, --admission affinity or "
+                         "--residency-mb > 0 to differ from the reference")
     ap.add_argument("--devices", type=int, default=1,
                     help="shard the base model over N devices ((data, "
                          "N/data) mesh; on CPU set XLA_FLAGS=--xla_force_"
@@ -80,6 +83,18 @@ def main():
                          "split into `data` contiguous shard pools with "
                          "occupancy-balanced admission (requires --devices "
                          "divisible by data and --slots divisible by data)")
+    ap.add_argument("--admission", default="occupancy",
+                    choices=("occupancy", "affinity"),
+                    help="shard admission policy: 'occupancy' (balanced, "
+                         "default) or 'affinity' (prefer the shard pool "
+                         "already hosting the request's tenant within a "
+                         "bounded imbalance — fewer unique tenants per "
+                         "shard, fewer deltas dequantized per step)")
+    ap.add_argument("--residency-mb", type=float, default=0.0,
+                    help="pre-decoded delta residency budget in MB: hot "
+                         "tenants' dequantized f32 delta values stay "
+                         "resident (LRU) and decode steps skip the "
+                         "per-step unpack; 0 disables the tier")
     args = ap.parse_args()
 
     cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
@@ -102,9 +117,19 @@ def main():
     tenants = synth_tenants(cfg, base, args.tenants, RATIO_SPECS[args.ratio],
                             rng)
 
-    def serve_stream(mesh_):
+    def serve_stream(mesh_, default_path=False):
+        # the identity reference serves the DEFAULT path (occupancy
+        # admission, no residency): the contract is that affinity
+        # placement and the pre-decoded value tier change scheduling and
+        # arithmetic *layout* only, never any request's tokens
+        from repro.serve import residency_bytes_from_mb
+        kw = {} if default_path else {
+            "admission": args.admission,
+            "residency_budget_bytes": residency_bytes_from_mb(
+                args.residency_mb),
+        }
         eng_ = ContinuousEngine(cfg, base, n_slots=args.slots,
-                                max_seq=args.max_seq, mesh=mesh_)
+                                max_seq=args.max_seq, mesh=mesh_, **kw)
         for name, deltas, report in tenants:
             eng_.register_tenant(name, deltas, report)
         reqs_ = []
@@ -122,13 +147,16 @@ def main():
 
     ref_reqs = None
     if args.check_identity:
-        if mesh is None:
-            raise SystemExit("--check-identity requires --devices N > 1 "
+        nondefault = args.admission != "occupancy" or args.residency_mb > 0
+        if mesh is None and not nondefault:
+            raise SystemExit("--check-identity requires --devices N > 1, "
+                             "--admission affinity or --residency-mb > 0 "
                              "(nothing to compare against otherwise)")
         # single-device reference FIRST (its jits trace without the mesh).
-        # With --data N this is also the data=1 reference: the identity
-        # contract covers both mesh-vs-none and dataN-vs-data1 at once.
-        _, ref_reqs, _ = serve_stream(None)
+        # With --data N this is also the data=1 reference, and it always
+        # runs the default path (occupancy admission, packed deltas) —
+        # so --admission/--residency-mb are covered by the same check.
+        _, ref_reqs, _ = serve_stream(None, default_path=True)
 
     for name, _, report in tenants:
         print(f"registered {name}: {report.summary()}", flush=True)
@@ -175,10 +203,22 @@ def main():
                 # request finished on its prefill token with --max-new 1)
                 occ = "n/a" if s["occupancy"] is None \
                     else f"{s['occupancy']:.2f}"
+                uniq = "n/a" if s["unique_tenants_mean"] is None \
+                    else f"{s['unique_tenants_mean']:.2f}"
                 print(f"  data shard {s['shard']} (slots "
                       f"{s['slots'][0]}..{s['slots'][1] - 1}): "
-                      f"occupancy {occ}, {s['tokens']} toks")
+                      f"occupancy {occ}, {s['tokens']} toks, "
+                      f"unique tenants/step {uniq}")
             print(f"  max step imbalance: {rep['shard_imbalance_max']}")
+        if rep.get("residency"):
+            r_ = rep["residency"]
+            hr = "n/a" if r_.get("hit_rate") is None \
+                else f"{r_['hit_rate']:.2f}"
+            print(f"  residency: {r_.get('resident_rows')}/"
+                  f"{r_.get('capacity_rows')} rows resident "
+                  f"({(r_.get('allocated_bytes') or 0) / 1e6:.2f}MB "
+                  f"allocated), hit rate {hr}, {r_['value_steps']} value / "
+                  f"{r_['packed_steps']} packed steps")
 
     store = eng.store
     base_bytes = tree_bytes(base)

@@ -34,13 +34,15 @@ import numpy as np
 
 from repro.configs.arch import ArchConfig
 from repro.core.apply import (
+    _is_pd,
     dget,
+    get_use_pallas,
     stack_tenant_deltas,
     wrap_slot_deltas,
     zero_delta_like,
 )
 from repro.core.compress import CompressionReport
-from repro.core.pack import PackedDelta
+from repro.core.pack import PackedDelta, decode_values
 from repro.models import lm
 from repro.serve.kv import SlotKVCache
 from repro.serve.metrics import Metrics
@@ -118,6 +120,148 @@ class DeltaStore:
 
 
 # ---------------------------------------------------------------------------
+# Pre-decoded delta residency (the hot-tenant value cache)
+# ---------------------------------------------------------------------------
+def residency_bytes_from_mb(mb: float) -> Optional[int]:
+    """``--residency-mb``-style knob -> ``residency_budget_bytes=``.
+
+    Decimal MB; 0 (or negative) disables the tier (None). The ONE
+    conversion both the launcher and the benches use, so the unit and
+    the disable semantics cannot drift between entry points.
+    """
+    b = int(mb * 1e6)
+    return b if b > 0 else None
+
+
+class DeltaResidency:
+    """LRU cache of *dequantized* per-tenant delta values under a byte budget.
+
+    The packed delta stack stays the ground truth; this tier additionally
+    keeps, for up to ``capacity`` hot tenant rows, the f32
+    ``pack.decode_values`` output of every leaf (shape = the leaf's idx
+    shape — ~8x the packed bytes at k=4, still ~10x under dense). A
+    decode step whose unique tenant rows are all resident skips the
+    per-step code unpack entirely (the values-given path in
+    ``core.apply``/``kernels.fallback``); any other step falls back to
+    the packed path, which is always correct.
+
+    * **Budget**: ``capacity = budget_bytes // bytes-per-row`` rows
+      (capped at the stack height). Below 2 rows the tier disables
+      itself — row 0 (the zero delta) is pinned to residency row 0,
+      whose zero-initialized buffer IS its decoded value, so at least
+      one real tenant must also fit for the tier to ever apply.
+    * **Promotion** is a single jitted buffer-row write per missing
+      tenant (donated, so it updates in place); values are decoded by
+      the same elementwise ``decode_values`` math the packed path runs
+      in-step, so resident values are bit-identical to in-step decode
+      and the token-identity contract survives.
+    * **Demotion** is LRU among rows not referenced by the current
+      step; no device work — the row is simply reused.
+    * **Mesh**: value buffers place their output-column axis over
+      ``model`` wherever it divides (mirroring
+      ``delta_shardings(shard_output=True)``), which is the layout the
+      shard_map'd values correction consumes natively.
+    """
+
+    def __init__(self, stacked: Any, budget_bytes: int, mesh=None):
+        leaves = [l for l in jax.tree.leaves(stacked, is_leaf=_is_pd)
+                  if _is_pd(l)]
+        if not leaves:
+            raise ValueError("residency needs a non-empty stacked delta tree")
+        self.n_rows = int(leaves[0].idx.shape[0])
+        self.row_bytes = int(sum(
+            4 * int(np.prod(l.idx.shape[1:])) for l in leaves))
+        self.budget_bytes = int(budget_bytes)
+        self.capacity = int(min(self.n_rows,
+                                self.budget_bytes // self.row_bytes))
+        self.enabled = self.capacity >= 2
+        self.hits = self.misses = self.fallback_steps = 0
+        self._stacked = stacked
+        self._slot_of: dict[int, int] = {}
+        self._lru: List[int] = []        # tenant rows, least-recent first
+        self._free: List[int] = []
+        self.values: Any = None
+        if not self.enabled:
+            return
+        self.values = jax.tree.map(
+            lambda d: jnp.zeros((self.capacity, *d.idx.shape[1:]),
+                                jnp.float32),
+            stacked, is_leaf=_is_pd)
+        if mesh is not None and mesh.shape.get("model", 1) > 1:
+            from jax.sharding import NamedSharding, PartitionSpec
+            n_model = mesh.shape["model"]
+            self.values = jax.tree.map(
+                lambda v: jax.device_put(v, NamedSharding(
+                    mesh, PartitionSpec(*([None] * (v.ndim - 1)
+                                          + ["model"]))
+                    if v.shape[-1] % n_model == 0 else PartitionSpec())),
+                self.values)
+        self._slot_of = {0: 0}           # zero delta: decoded values ARE 0
+        self._free = list(range(1, self.capacity))
+        self._promote = jax.jit(
+            lambda vals, stacked_, row, slot: jax.tree.map(
+                lambda d, buf: buf.at[slot].set(decode_values(d.index(row))),
+                stacked_, vals, is_leaf=_is_pd),
+            donate_argnums=0)
+
+    def ensure(self, rows: np.ndarray) -> Optional[np.ndarray]:
+        """Make every unique tenant row of ``rows`` resident, promoting
+        (and LRU-demoting) as needed; returns the int32 [n_rows]
+        tenant-row -> residency-row map, or None when this step must run
+        packed (tier disabled, or more unique tenants than capacity)."""
+        if not self.enabled:
+            return None
+        uniq = [int(r) for r in np.unique(np.asarray(rows)) if r != 0]
+        if len(uniq) > self.capacity - 1:     # row 0 keeps its pinned slot
+            self.fallback_steps += 1
+            return None
+        missing = [r for r in uniq if r not in self._slot_of]
+        self.hits += len(uniq) - len(missing)
+        self.misses += len(missing)
+        for r in missing:
+            if self._free:
+                slot = self._free.pop(0)
+            else:
+                victim = next(v for v in self._lru if v not in uniq)
+                self._lru.remove(victim)
+                slot = self._slot_of.pop(victim)
+            self._slot_of[r] = slot
+            self.values = self._promote(self.values, self._stacked,
+                                        jnp.int32(r), jnp.int32(slot))
+        for r in uniq:                        # refresh recency, MRU last
+            if r in self._lru:
+                self._lru.remove(r)
+            self._lru.append(r)
+        res_map = np.zeros(self.n_rows, np.int32)
+        for row, slot in self._slot_of.items():
+            res_map[row] = slot
+        return res_map
+
+    def reset_counters(self) -> None:
+        """Zero the hit/miss/fallback counters; resident rows stay warm."""
+        self.hits = self.misses = self.fallback_steps = 0
+
+    def stats(self) -> dict:
+        total = self.hits + self.misses
+        return {
+            "enabled": self.enabled,
+            "capacity_rows": self.capacity,
+            "row_bytes": self.row_bytes,
+            "budget_bytes": self.budget_bytes,
+            # the full capacity*row_bytes buffer is committed at
+            # construction; resident_bytes is the HOT subset of it
+            "allocated_bytes": (self.capacity if self.enabled else 0)
+            * self.row_bytes,
+            "resident_rows": len(self._slot_of),
+            "resident_bytes": len(self._slot_of) * self.row_bytes,
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_rate": self.hits / total if total else None,
+            "fallback_steps": self.fallback_steps,
+        }
+
+
+# ---------------------------------------------------------------------------
 # Continuous-batching engine
 # ---------------------------------------------------------------------------
 class ContinuousEngine:
@@ -151,6 +295,18 @@ class ContinuousEngine:
     per shard, and KV slot rows live on the shard that admitted them —
     token-identical to ``data=1`` on the same trace (serve/README.md
     §Data-parallel admission).
+
+    ``admission=`` selects the shard-placement policy ("occupancy" —
+    the balanced default — or "affinity", which prefers the shard pool
+    already hosting the request's tenant within a bounded occupancy
+    imbalance, shrinking per-shard unique-tenant counts; or any
+    :class:`~repro.serve.scheduler.AdmissionPolicy` instance).
+
+    ``residency_budget_bytes=`` enables the :class:`DeltaResidency`
+    tier: hot tenants' dequantized f32 delta values stay resident under
+    the byte budget (LRU demotion) and decode steps whose tenants are
+    all resident skip the per-step unpack; steps that are not fall back
+    to the packed path. Token-identical either way.
     """
 
     def __init__(self, cfg: ArchConfig, base_params: Any, *,
@@ -158,7 +314,9 @@ class ContinuousEngine:
                  store: Optional[DeltaStore] = None, clock=time.monotonic,
                  mesh=None, data: Optional[int] = None,
                  slot_dispatch: str = "segments",
-                 shard_deltas: str = "auto"):
+                 shard_deltas: str = "auto",
+                 admission="occupancy",
+                 residency_budget_bytes: Optional[int] = None):
         if cfg.family in ("encdec", "vlm"):
             raise ValueError(
                 f"continuous batching does not support family={cfg.family!r} "
@@ -216,11 +374,17 @@ class ContinuousEngine:
         self.buckets = LengthBuckets(min_bucket=min_bucket,
                                      max_bucket=max_seq, exact=exact)
         self.queue = RequestQueue()
-        self.sched = Scheduler(n_slots, self.buckets, data_shards=data)
+        self.sched = Scheduler(n_slots, self.buckets, data_shards=data,
+                               admission=admission)
         self.kv = SlotKVCache(cfg, n_slots, max_seq, shardings=cache_sh,
                               data_shards=data)
         self.metrics = Metrics(n_slots, data_shards=data)
         self.clock = clock
+        # pre-decoded delta residency: built lazily alongside the tenant
+        # stack (it mirrors the stacked tree's shapes) and only under the
+        # segments dispatch — the per-row path has no values formulation
+        self.residency_budget_bytes = residency_budget_bytes
+        self.residency: Optional[DeltaResidency] = None
 
         # host mirrors of per-slot decode state (row 0 = zero delta / base)
         self._tok = np.zeros(n_slots, np.int32)
@@ -274,6 +438,7 @@ class ContinuousEngine:
         if self._store_version == self.store.version:
             return
         tenants = self.store.ordered()
+        self.residency = None            # stack rows changed: rebuild below
         if not tenants:
             self._stacked = None
             self._zero_tree = None
@@ -311,6 +476,11 @@ class ContinuousEngine:
                                                        self.mesh)
                 self._zero_tree = mesh_lib.replicate(self._zero_tree,
                                                      self.mesh)
+            if self.residency_budget_bytes \
+                    and self.slot_dispatch == "segments":
+                self.residency = DeltaResidency(
+                    self._stacked, self.residency_budget_bytes,
+                    mesh=self.mesh)
         # registration is append-only so rows never shift — but a live
         # unregister would remap rows under in-flight sequences, silently
         # decoding them with another tenant's delta. Refuse instead.
@@ -419,8 +589,10 @@ class ContinuousEngine:
         self._install_mesh()
         self._refresh_stacked()
         sd = None
+        res_used = None
         if self._stacked is not None:
             seg = None
+            values = res_map = None
             if self.slot_dispatch == "segments":
                 # host-side layout: rows grouped by tenant, static
                 # shapes — the decode jit still compiles exactly once.
@@ -434,8 +606,26 @@ class ContinuousEngine:
                 else:
                     seg = tenant_segments(self._row)
                 seg = jax.tree.map(jnp.asarray, seg)
+                # the residency tier targets the XLA host path (it
+                # removes the per-step code unpack); under the Pallas
+                # backend the segments kernel already decodes each tile
+                # once per segment, so attaching values would demote
+                # decode to the XLA fallback — checked per step, like
+                # the other apply-mode globals in _install_mesh
+                if self.residency is not None and not get_use_pallas():
+                    # promote this step's tenants into the value cache;
+                    # None (over capacity) -> packed path, still correct.
+                    # Attaching values changes the SlotDelta pytree
+                    # structure, so a residency engine compiles at most
+                    # TWO decode shapes (values + packed), not per step.
+                    rm = self.residency.ensure(self._row)
+                    res_used = rm is not None
+                    if res_used:
+                        values = self.residency.values
+                        res_map = jnp.asarray(rm)
             sd = wrap_slot_deltas(self._stacked, jnp.asarray(self._row),
-                                  segments=seg)
+                                  segments=seg, values=values,
+                                  res_map=res_map)
         nxt, new_cache = self._decode(
             self.base, self.kv.cache, jnp.asarray(self._tok[:, None]),
             jnp.asarray(self._pos), sd)
@@ -445,7 +635,9 @@ class ContinuousEngine:
         self.metrics.record_step(
             len(active),
             shard_active=self.sched.shard_occupancy() if self.data > 1
-            else None)
+            else None,
+            shard_unique=self.sched.shard_unique_tenants(self._row),
+            residency_used=res_used)
         for slot in active:
             state = self.sched.slots[slot]
             req = state.request
@@ -493,11 +685,18 @@ class ContinuousEngine:
         else:
             raise RuntimeError(f"serve loop did not drain in {max_steps} steps")
         self.metrics.stop(self._now())
+        if self.residency is not None:
+            self.metrics.residency = self.residency.stats()
         return self.metrics
 
     def reset_metrics(self) -> None:
-        """Fresh metrics collector (e.g. after jit warmup), same engine."""
+        """Fresh metrics collector (e.g. after jit warmup), same engine.
+
+        Residency *counters* reset with the metrics window; resident
+        rows stay warm (they are engine state, like compiled jits)."""
         self.metrics = Metrics(self.n_slots, data_shards=self.data)
+        if self.residency is not None:
+            self.residency.reset_counters()
         self._t0 = None
 
     def serve(self, requests: List[tuple], max_new_tokens: int = 16) -> List[np.ndarray]:

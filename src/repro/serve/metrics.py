@@ -44,7 +44,12 @@ class Metrics:
     With ``data_shards > 1`` the engine also reports per-data-shard
     occupancy and throughput (slot rows shard over the mesh ``data``
     axis in contiguous pools; the balanced-admission policy is judged
-    by exactly these numbers).
+    by exactly these numbers) plus per-shard **unique-tenant counts**
+    per decode step — the number of distinct deltas each shard
+    dequantizes, the observable the tenant-affinity admission policy
+    exists to shrink. ``residency`` (set by the engine at drain time)
+    carries the pre-decoded value-cache stats, and the per-step
+    value-path/packed-path split is tallied here.
     """
 
     def __init__(self, n_slots: int, data_shards: int = 1):
@@ -56,9 +61,15 @@ class Metrics:
         self.step_active: List[int] = []     # active slots at each decode step
         # per-shard active counts at each decode step, [steps][data_shards]
         self.step_shard_active: List[List[int]] = []
+        # per-shard distinct non-base tenant rows at each decode step
+        self.step_shard_unique: List[List[int]] = []
         self.shard_tokens: List[int] = [0] * data_shards
         self.n_decode_steps = 0
         self.n_prefills = 0
+        # decode steps served from the pre-decoded value cache vs packed
+        self.residency_value_steps = 0
+        self.residency_packed_steps = 0
+        self.residency: Optional[dict] = None   # DeltaResidency.stats()
         self.t_start: Optional[float] = None
         self.t_end: Optional[float] = None
 
@@ -90,7 +101,9 @@ class Metrics:
         self._tenant(tenant).latencies.append(latency)
 
     def record_step(self, n_active: int,
-                    shard_active: Optional[List[int]] = None) -> None:
+                    shard_active: Optional[List[int]] = None,
+                    shard_unique: Optional[List[int]] = None,
+                    residency_used: Optional[bool] = None) -> None:
         self.n_decode_steps += 1
         self.step_active.append(n_active)
         if shard_active is not None:
@@ -101,6 +114,17 @@ class Metrics:
                     f"shard_active has {len(shard_active)} entries for "
                     f"{self.data_shards} data shards")
             self.step_shard_active.append(list(shard_active))
+        if shard_unique is not None:
+            if len(shard_unique) != self.data_shards:
+                raise ValueError(
+                    f"shard_unique has {len(shard_unique)} entries for "
+                    f"{self.data_shards} data shards")
+            self.step_shard_unique.append(list(shard_unique))
+        if residency_used is not None:
+            if residency_used:
+                self.residency_value_steps += 1
+            else:
+                self.residency_packed_steps += 1
 
     def record_shard_token(self, shard: int, n: int = 1) -> None:
         self.shard_tokens[shard] += n
@@ -121,13 +145,24 @@ class Metrics:
             occ = (per_step.mean(axis=0) / self.shard_size).tolist()
         else:
             occ = [None] * self.data_shards
+        uniq = self.unique_tenants_per_shard_mean
         return [{
             "shard": s,
             "slots": [s * self.shard_size, (s + 1) * self.shard_size],
             "occupancy": occ[s],
+            "unique_tenants_mean": None if uniq is None else uniq[s],
             "tokens": self.shard_tokens[s],
             "tokens_per_sec": self.shard_tokens[s] / wall if wall > 0 else None,
         } for s in range(self.data_shards)]
+
+    @property
+    def unique_tenants_per_shard_mean(self) -> Optional[List[float]]:
+        """Mean (over decode steps) distinct non-base tenants per shard —
+        the per-device dequantization load affinity admission shrinks."""
+        if not self.step_shard_unique:
+            return None
+        per_step = np.asarray(self.step_shard_unique, np.float64)
+        return per_step.mean(axis=0).tolist()
 
     @property
     def shard_imbalance_max(self) -> Optional[int]:
@@ -144,10 +179,21 @@ class Metrics:
             wall = self.t_end - self.t_start
         total_tokens = sum(t.n_tokens for t in self.tenants.values())
         all_ttfts = [x for t in self.tenants.values() for x in t.ttfts]
+        uniq = self.unique_tenants_per_shard_mean
+        residency = None
+        if self.residency is not None \
+                or self.residency_value_steps or self.residency_packed_steps:
+            residency = dict(self.residency or {})
+            residency["value_steps"] = self.residency_value_steps
+            residency["packed_steps"] = self.residency_packed_steps
         return {
             "data_shards": self.data_shards,
             "shards": self.shard_report(wall),
             "shard_imbalance_max": self.shard_imbalance_max,
+            "unique_tenants_per_shard_mean": uniq,
+            "unique_tenants_mean": None if uniq is None
+            else float(np.mean(uniq)),
+            "residency": residency,
             "wall_time_s": wall,
             "n_slots": self.n_slots,
             "decode_steps": self.n_decode_steps,

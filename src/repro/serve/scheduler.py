@@ -22,11 +22,20 @@ Design points (serve/README.md has the full picture):
 * With ``data_shards > 1`` the slot table is partitioned into
   ``data_shards`` **contiguous shard pools** (slot rows shard over the
   mesh ``data`` axis in the serve layout, so pool ``s`` is exactly the
-  rows device-shard ``s`` owns). Admission balances per-shard occupancy:
-  each request goes to the least-occupied shard with a free slot,
-  ties broken by the lowest slot id — placement is a pure function of
-  the slot table, so a replayed trace lands every request on the same
-  shard.
+  rows device-shard ``s`` owns). *Which* pool a popped request lands in
+  is a pluggable :class:`AdmissionPolicy`:
+
+  - :class:`BalancedAdmission` (default): the least-occupied shard with
+    a free slot, ties broken by the lowest slot id — placement is a
+    pure function of the slot table, so a replayed trace lands every
+    request on the same shard.
+  - :class:`AffinityAdmission`: prefer a shard already hosting the
+    request's *tenant* (so each data shard sees fewer unique tenants
+    per decode step and dequantizes fewer deltas), but only while that
+    shard stays within ``max_imbalance`` of the least-occupied shard;
+    otherwise fall back to the balanced rule. A policy only picks
+    *among* open shards — it can never decline a placement — so the
+    capacity / EDF / no-starvation guarantees are policy-independent.
 """
 from __future__ import annotations
 
@@ -227,6 +236,96 @@ def tenant_segments_sharded(rows: np.ndarray, data_shards: int):
 
 
 # ---------------------------------------------------------------------------
+# Admission policies
+# ---------------------------------------------------------------------------
+class AdmissionPolicy:
+    """Chooses the shard pool for one popped request.
+
+    The contract every policy must honor (and the property suite pins):
+    ``choose`` is called only when at least one shard has a free slot,
+    and must return a member of ``open_shards`` — a policy decides
+    *where*, never *whether*, so admission always fills free slots from
+    the ready queue (no starvation) and the EDF pop order is untouched.
+    All inputs are host-side state, so placement stays a deterministic
+    pure function of the slot table and the popped request.
+
+    ``max_imbalance`` is the policy's occupancy bound: immediately after
+    any admission round, every shard the policy placed into is within
+    ``max_imbalance`` of the least-occupied shard.
+    """
+
+    name = "base"
+    max_imbalance = 1
+
+    def choose(self, req: "Request", open_shards: List[int], occ: List[int],
+               free: List[List[int]], hosted: List[set]) -> int:
+        """Pick a shard for ``req``.
+
+        ``open_shards``: shards with >= 1 free slot (ascending).
+        ``occ``: per-shard active count (including slots claimed earlier
+        in this round). ``free``: per-shard free slot ids (ascending).
+        ``hosted``: per-shard set of tenant names currently hosted
+        (active slots plus this round's claims).
+        """
+        raise NotImplementedError
+
+
+class BalancedAdmission(AdmissionPolicy):
+    """Occupancy-balanced placement (the default, PR 4 behavior):
+    least-occupied open shard, ties broken by the lowest free slot id."""
+
+    name = "occupancy"
+    max_imbalance = 1
+
+    def choose(self, req, open_shards, occ, free, hosted) -> int:
+        return min(open_shards, key=lambda s: (occ[s], free[s][0]))
+
+
+class AffinityAdmission(BalancedAdmission):
+    """Tenant-affinity placement with a bounded-imbalance guardrail.
+
+    Prefer an open shard that already hosts the request's tenant — the
+    per-shard unique-tenant count then grows only when it must, so each
+    ``(data, model)`` device dequantizes fewer distinct deltas per
+    decode step. Affinity never overrides balance unboundedly: a hosting
+    shard is eligible only while its occupancy stays strictly below
+    ``min(occ) + max_imbalance`` (occupancy over *all* shards), so after
+    placement it is within ``max_imbalance`` of the least-occupied
+    shard. Base requests (``tenant=None``) and requests whose tenant is
+    hosted nowhere eligible fall back to the balanced rule.
+    """
+
+    name = "affinity"
+
+    def __init__(self, max_imbalance: int = 2):
+        if max_imbalance < 1:
+            raise ValueError(f"max_imbalance={max_imbalance} must be >= 1")
+        self.max_imbalance = int(max_imbalance)
+
+    def choose(self, req, open_shards, occ, free, hosted) -> int:
+        if req.tenant is not None:
+            floor = min(occ)
+            aff = [s for s in open_shards
+                   if req.tenant in hosted[s]
+                   and occ[s] - floor < self.max_imbalance]
+            if aff:
+                return min(aff, key=lambda s: (occ[s], free[s][0]))
+        return super().choose(req, open_shards, occ, free, hosted)
+
+
+def make_admission(policy) -> AdmissionPolicy:
+    """Resolve an admission policy from a name or pass an instance through."""
+    if isinstance(policy, AdmissionPolicy):
+        return policy
+    if policy in (None, "occupancy", "balanced"):
+        return BalancedAdmission()
+    if policy == "affinity":
+        return AffinityAdmission()
+    raise ValueError(f"unknown admission policy {policy!r} "
+                     "(expected 'occupancy' | 'affinity' | AdmissionPolicy)")
+
+
+# ---------------------------------------------------------------------------
 # Slot table
 # ---------------------------------------------------------------------------
 def shard_pool_size(n_slots: int, data_shards: int) -> int:
@@ -261,16 +360,18 @@ class Scheduler:
 
     ``data_shards > 1`` partitions the ``n_slots`` slot rows into
     contiguous shard pools of ``n_slots / data_shards`` (the rows each
-    mesh ``data`` shard owns in the serve cache layout) and admission
-    becomes occupancy-balanced across pools — see :meth:`admit`.
+    mesh ``data`` shard owns in the serve cache layout); ``admission``
+    (an :class:`AdmissionPolicy`, or its name) picks the pool for each
+    popped request — occupancy-balanced by default — see :meth:`admit`.
     """
 
     def __init__(self, n_slots: int, buckets: LengthBuckets,
-                 data_shards: int = 1):
+                 data_shards: int = 1, admission=None):
         self.n_slots = n_slots
         self.buckets = buckets
         self.data_shards = data_shards
         self.shard_size = shard_pool_size(n_slots, data_shards)
+        self.admission = make_admission(admission)
         self.slots: List[Optional[SlotState]] = [None] * n_slots
 
     # -- introspection ------------------------------------------------------
@@ -299,24 +400,47 @@ class Scheduler:
                 occ[self.shard_of(i)] += 1
         return occ
 
+    def hosted_tenants(self) -> List[set]:
+        """Per-shard set of tenant names currently hosted (base requests,
+        ``tenant=None``, are not tracked — they carry no delta)."""
+        hosted: List[set] = [set() for _ in range(self.data_shards)]
+        for i, s in enumerate(self.slots):
+            if s is not None and s.request.tenant is not None:
+                hosted[self.shard_of(i)].add(s.request.tenant)
+        return hosted
+
+    def shard_unique_tenants(self, rows) -> List[int]:
+        """Distinct non-base tenant rows per shard pool of ``rows`` [B] —
+        the number of distinct deltas each data shard dequantizes in a
+        decode step over those slot rows (row 0, the zero delta, is not
+        counted). The observable affinity admission tries to shrink."""
+        rows = np.asarray(rows)
+        return [int(np.unique(pool[pool > 0]).size)
+                for s in range(self.data_shards)
+                for pool in [rows[s * self.shard_size:
+                                  (s + 1) * self.shard_size]]]
+
     # -- transitions --------------------------------------------------------
     def admit(self, queue: RequestQueue, now: float) -> List[tuple]:
         """Fill free slots from the queue; returns [(slot, request)].
 
-        Placement is **occupancy-balanced and deterministic**: each
-        popped request goes to the least-occupied shard pool that still
-        has a free slot (occupancy counts both active slots and slots
-        already claimed earlier in this round), ties broken by the
-        lowest slot id. The guarantees (pinned by the property tests):
-        on arrival-only traces per-shard occupancy never differs by
-        more than 1 after a round, and on any trace every shard that
-        admitted this round ends within 1 of the least-occupied shard.
-        (A shard left imbalanced by earlier finishes stays imbalanced
-        if the queue drains first — admission balances what it admits,
-        it does not migrate active sequences.) With data_shards=1 this
-        degrades to exactly the old lowest-free-slot-first policy.
+        Placement is **deterministic** and delegated to the admission
+        policy: each popped request goes to the shard
+        ``self.admission.choose(...)`` picks among those that still
+        have a free slot (occupancy and hosted-tenant sets count both
+        active slots and slots already claimed earlier in this round),
+        and takes that shard's lowest free slot id. Guarantees pinned
+        by the property tests, for every policy: admission fills
+        ``min(free, ready)`` slots in EDF pop order, and every shard
+        the policy placed into ends within ``policy.max_imbalance`` of
+        the least-occupied shard (1 for the balanced default). (A shard
+        left imbalanced by earlier finishes stays imbalanced if the
+        queue drains first — admission balances what it admits, it does
+        not migrate active sequences.) With data_shards=1 every policy
+        degrades to exactly the old lowest-free-slot-first behavior.
         """
         occ = self.shard_occupancy()
+        hosted = self.hosted_tenants()
         # pool ranges ascend, so each free list is born sorted by slot id
         free = [[i for i in self.shard_slots(s) if self.slots[i] is None]
                 for s in range(self.data_shards)]
@@ -328,9 +452,17 @@ class Scheduler:
             req = queue.pop_ready(now)
             if req is None:
                 break
-            shard = min(open_shards, key=lambda s: (occ[s], free[s][0]))
+            shard = self.admission.choose(req, open_shards, occ, free, hosted)
+            if shard not in open_shards:
+                # ValueError (not assert): a policy returning a full shard
+                # must fail loudly, not pop from an empty free list
+                raise ValueError(
+                    f"admission policy {self.admission.name!r} chose shard "
+                    f"{shard} with no free slot (open: {open_shards})")
             slot = free[shard].pop(0)
             occ[shard] += 1
+            if req.tenant is not None:
+                hosted[shard].add(req.tenant)
             req.t_admitted = now
             admitted.append((slot, req))
         return admitted

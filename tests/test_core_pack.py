@@ -18,7 +18,25 @@ def _pack(h_in=256, h_out=32, h_g=64, alpha=8, k=4, m=4, seed=0):
     return groupwise_dropout_pack(rng, d, h_g=h_g, alpha=alpha, k_bits=k, m=m)
 
 
-@pytest.mark.parametrize("k,m", [(4, 1), (4, 4), (4, 8), (8, 8), (2, 2), (1, 1)])
+def _canonical(p: PackedDelta):
+    """(idx, q) with each (group, column)'s K entries sorted by idx.
+
+    The m-part CSR reassembly preserves the (idx, code) *pairs* exactly
+    but interleaves part order within a (g, o) row, so elementwise array
+    equality is only meaningful after sorting by the (unique) local
+    indices — the canonical form of the structured-sparse layout.
+    """
+    from repro.core import quant
+    q = np.asarray(quant.unpack_bits(p.codes, quant.pack_width(p.k_bits),
+                                     p.keep, axis=p.codes.ndim - 2))
+    idx = np.asarray(p.idx, np.int64)
+    order = np.argsort(idx, axis=1, kind="stable")
+    return (np.take_along_axis(idx, order, axis=1),
+            np.take_along_axis(q, order, axis=1))
+
+
+@pytest.mark.parametrize("k,m", [(4, 1), (4, 4), (4, 8), (8, 8), (2, 2),
+                                 (1, 1)])
 def test_storage_parts_roundtrip(k, m):
     p = _pack(k=k, m=m)
     parts = to_storage_parts(p)
@@ -29,6 +47,34 @@ def test_storage_parts_roundtrip(k, m):
     p2 = from_storage_parts(parts, h_in=p.h_in, h_out=p.h_out, h_g=p.h_g,
                             keep=p.keep, alpha=p.alpha, k_bits=k,
                             scale=p.scale, zero=p.zero)
+    np.testing.assert_array_equal(np.asarray(reconstruct_dense(p)),
+                                  np.asarray(reconstruct_dense(p2)))
+
+
+@pytest.mark.parametrize("k", [2, 4, 8])
+@pytest.mark.parametrize("m", [1, 2, 4])
+def test_storage_parts_roundtrip_full_equality(k, m):
+    """Paper-faithful storage round-trip: to_storage_parts ->
+    from_storage_parts reproduces the original PackedDelta — codes and
+    idx (canonically ordered), static meta, scale/zero, and the dense
+    reconstruction — over the k x m sweep."""
+    if 2 ** k < m:
+        pytest.skip("more parts than code levels")
+    p = _pack(h_in=128, h_out=24, h_g=32, alpha=4, k=k, m=m, seed=k * 10 + m)
+    p2 = from_storage_parts(to_storage_parts(p), h_in=p.h_in, h_out=p.h_out,
+                            h_g=p.h_g, keep=p.keep, alpha=p.alpha, k_bits=k,
+                            scale=p.scale, zero=p.zero)
+    assert (p2.h_in, p2.h_out, p2.h_g, p2.keep, p2.alpha, p2.k_bits, p2.m) \
+        == (p.h_in, p.h_out, p.h_g, p.keep, p.alpha, p.k_bits, p.m)
+    assert p2.idx.dtype == p.idx.dtype and p2.codes.dtype == p.codes.dtype
+    np.testing.assert_array_equal(np.asarray(p2.scale, np.float32),
+                                  np.asarray(p.scale, np.float32))
+    np.testing.assert_array_equal(np.asarray(p2.zero, np.int32),
+                                  np.asarray(p.zero, np.int32))
+    idx_a, q_a = _canonical(p)
+    idx_b, q_b = _canonical(p2)
+    np.testing.assert_array_equal(idx_a, idx_b)
+    np.testing.assert_array_equal(q_a, q_b)
     np.testing.assert_array_equal(np.asarray(reconstruct_dense(p)),
                                   np.asarray(reconstruct_dense(p2)))
 

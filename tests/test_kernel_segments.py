@@ -196,6 +196,42 @@ def test_slot_delta_matmul_modes(mode):
                                atol=1e-4, rtol=1e-4)
 
 
+def test_values_path_bit_identical_to_packed():
+    """The pre-decoded residency path (values + res_map on the
+    SlotDelta) must produce the EXACT bits of the packed segment
+    dispatch — decode-ahead-of-time is the same elementwise math as
+    decode-in-step, and the contraction is shared. Includes a permuted
+    res_map (residency rows need not align with tenant rows)."""
+    from repro.core.apply import SlotDelta
+    from repro.core.pack import decode_values
+
+    stk_tree, _ = _stacked(3)
+    rows = np.array([2, 0, 2, 1, 0, 1], np.int32)
+    B = len(rows)
+    x = jax.random.normal(jax.random.PRNGKey(9), (B, 1, 128))
+    seg = _segments(rows)
+    packed = SlotDelta(stk_tree, jnp.asarray(rows), seg)
+    want = np.asarray(jax.jit(slot_delta_matmul)(x, packed))
+
+    # identity res_map: residency row == tenant row
+    vals = decode_values(stk_tree)
+    ident = SlotDelta(stk_tree, jnp.asarray(rows), seg, vals,
+                      jnp.arange(vals.shape[0], dtype=jnp.int32))
+    got = np.asarray(jax.jit(slot_delta_matmul)(x, ident))
+    np.testing.assert_array_equal(got, want)
+
+    # permuted residency buffer: slot order differs from tenant order
+    perm = np.array([2, 0, 1], np.int32)       # residency slot -> tenant row
+    buf = jnp.asarray(np.asarray(vals)[perm])
+    res_map = np.zeros(vals.shape[0], np.int32)
+    for slot, row in enumerate(perm):
+        res_map[row] = slot
+    permd = SlotDelta(stk_tree, jnp.asarray(rows), seg, buf,
+                      jnp.asarray(res_map))
+    got = np.asarray(jax.jit(slot_delta_matmul)(x, permd))
+    np.testing.assert_array_equal(got, want)
+
+
 def test_segments_layout_shapes_static():
     """Different tenant mixes must produce identical array shapes (one
     decode jit compilation regardless of the batch's tenant diversity)."""

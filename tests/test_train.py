@@ -50,6 +50,7 @@ def test_microbatch_equivalence(setup):
                                    atol=5e-3)
 
 
+@pytest.mark.slow  # full grad trace through every delta site (~27s)
 def test_loss_differentiable_through_delta_path(setup):
     """grad through deltas= must work: the fusion-pinning barrier in
     apply_linear carries a straight-through VJP (regression: a bare
