@@ -108,8 +108,23 @@ def bench_shape(name, h_in, h_out, h_g, alpha, k_bits, t_dec, t_pre) -> dict:
                      "alpha": alpha, "k_bits": k_bits,
                      "T_decode": t_dec, "T_prefill": t_pre}}
 
+    # which formulation the autotune table ACTUALLY selects at this
+    # shape's decode/prefill token counts — the winner's identity, so a
+    # BENCH_kernels.json diff can explain a crossover move instead of
+    # showing two timings and leaving the dispatch decision invisible.
+    # Captured through the same attribution hook the serving engine
+    # uses, from the real chooser (fallback.correction_nd), so the
+    # recorded winner can never drift from the served decision.
+    from repro.kernels import autotune
+    from repro.serve.trace import attribution
+    out["autotune"] = autotune.lookup(h_g, p.keep, k_bits, h_in, h_out)
+
     for phase, T in (("decode", t_dec), ("prefill", t_pre)):
         x = jax.random.normal(rng, (T, h_in))
+        with attribution() as notes:
+            fallback.correction_nd(x, p)
+        sel = next((n for n in notes if n["site"] == "correction"), None)
+        out[f"{phase}_selected"] = sel["formulation"] if sel else None
         out[f"{phase}_xla_dense_us"] = _time(
             lambda x: fallback.dense_correction(x, p), x)
         out[f"{phase}_xla_gather_us"] = _time(
@@ -132,11 +147,18 @@ def bench_shape(name, h_in, h_out, h_g, alpha, k_bits, t_dec, t_pre) -> dict:
             set_slot_dispatch("segments")
             out[f"segments_{tag}_us"] = _time(
                 lambda x, sd: slot_delta_matmul(x, sd), xb, sd)
+            with attribution() as notes:
+                slot_delta_matmul(xb, sd)
+            out[f"segments_{tag}_selected"] = next(
+                (n["formulation"] for n in notes if "formulation" in n),
+                None)
     finally:
         set_slot_dispatch(prev)
 
     print(f"{name}: decode dense {out['decode_xla_dense_us']:.0f}us "
-          f"gather {out['decode_xla_gather_us']:.0f}us | "
+          f"gather {out['decode_xla_gather_us']:.0f}us "
+          f"(selected {out['decode_selected']}; "
+          f"prefill {out['prefill_selected']}) | "
           f"dup per-row {out['per_row_dup_us']:.0f}us "
           f"segments {out['segments_dup_us']:.0f}us")
     return out

@@ -46,6 +46,14 @@ _SLOT_DISPATCH = "segments"
 _MESH = None
 
 
+def _note(site: str, **attrs) -> None:
+    """Report the chosen dispatch to an open trace context (no-op
+    otherwise). Lazy import: serve's __init__ imports the engine, which
+    imports this module."""
+    from repro.serve.trace import note_path
+    note_path(site, **attrs)
+
+
 def set_use_pallas(flag: bool) -> None:
     global _USE_PALLAS
     _USE_PALLAS = flag
@@ -380,7 +388,9 @@ def slot_delta_matmul(x: jnp.ndarray, sd: SlotDelta) -> jnp.ndarray:
     behavior, kept selectable via :func:`set_slot_dispatch`.
     """
     if sd.segments is not None and _SLOT_DISPATCH == "segments":
+        _note("slot_dispatch", dispatch="segments")
         return _segment_dispatch(x, sd)
+    _note("slot_dispatch", dispatch="per_row")
     g = sd.gather()
     y = _sharded_correction(x, g)
     if y is not None:
@@ -390,6 +400,7 @@ def slot_delta_matmul(x: jnp.ndarray, sd: SlotDelta) -> jnp.ndarray:
         return ops.delta_spmm_slots(x, g)
     # per-row gather: never materializes the dense [B, h_in, h_out]
     # stack, and bit-matches the shared-tenant gather formulation
+    _note("slot_dispatch", formulation="per-row-gather")
     return fallback.gather_correction_rows(x, g).astype(x.dtype)
 
 

@@ -50,6 +50,14 @@ import jax.numpy as jnp
 from repro.core.pack import PackedDelta, decode_values, reconstruct_dense
 
 
+def _note(site: str, **attrs) -> None:
+    """Report the chosen formulation to an open trace context (no-op
+    otherwise). Lazy import: the serve package's __init__ imports the
+    engine, which imports this module."""
+    from repro.serve.trace import note_path
+    note_path(site, **attrs)
+
+
 def _flat_gather_idx(d: PackedDelta, idx: jnp.ndarray) -> jnp.ndarray:
     """Local in-group indices [..., G, K, O] -> flat h_in indices."""
     G = d.n_groups
@@ -76,7 +84,11 @@ def correction(x2: jnp.ndarray, d: PackedDelta, *,
                gather_max_t: int = 64) -> jnp.ndarray:
     """Formulation chooser: gather for decode-sized T, dense otherwise."""
     if x2.shape[0] <= gather_max_t:
+        _note("correction", formulation="xla-gather",
+              T=int(x2.shape[0]), gather_max_t=int(gather_max_t))
         return gather_correction(x2, d)
+    _note("correction", formulation="xla-dense",
+          T=int(x2.shape[0]), gather_max_t=int(gather_max_t))
     return dense_correction(x2, d)
 
 
@@ -187,6 +199,8 @@ def segment_correction(x2: jnp.ndarray, d: PackedDelta,
     removes the unpack from the step altogether.
     """
     T = x2.shape[0]
+    _note("segment_correction", formulation="segments-xla",
+          residency="values" if values is not None else "packed", T=int(T))
     # map each (sorted) row to its segment: count of segment ends <= row
     rows_iota = jnp.arange(T, dtype=jnp.int32)
     row_seg = (rows_iota[:, None] >= seg_offsets[None, 1:]).sum(axis=1)

@@ -37,6 +37,13 @@ from repro.kernels import delta_spmm as _k
 # CPU containers run kernels in interpret mode; real TPUs compile them.
 _INTERPRET = jax.default_backend() != "tpu"
 
+
+def _note(site: str, **attrs) -> None:
+    """Report the chosen path to an open trace context (no-op otherwise).
+    Lazy import: serve's __init__ imports the engine, which imports us."""
+    from repro.serve.trace import note_path
+    note_path(site, **attrs)
+
 MAX_HG = 256
 MAX_KEEP = 128
 
@@ -122,6 +129,8 @@ def delta_spmm(x: jnp.ndarray, d: PackedDelta, *, tb: Optional[int] = None,
     tb_eff = min(t["tb"], max(_pow2_floor(x2.shape[0]), 8))
     x2, T = _pad_rows(x2, tb_eff)
     ob_eff = _col_tile(d.h_out, t["ob"])
+    _note("delta_spmm", formulation="pallas",
+          tb=tb_eff, ob=ob_eff, kc=t["kc"])
     dp = _pad_cols(d, ob_eff)
     s, z = _scalars(d)
     y = _k.delta_spmm_kernel(x2, dp.idx, dp.codes, s, z, h_g=d.h_g,
@@ -151,7 +160,9 @@ def delta_spmm_slots(x: jnp.ndarray, d: PackedDelta, *,
     assert d.stack_shape() == (B,), (d.stack_shape(), x.shape)
     probe = d.index(0)
     if interpret or not kernel_supported(probe):
+        _note("delta_spmm_slots", formulation="per-row-gather", B=int(B))
         return fallback.gather_correction_rows(x, d)
+    _note("delta_spmm_slots", formulation="per-row-pallas", B=int(B))
     fn = lambda xb, db: delta_spmm(xb, db, tb=tb, ob=ob, kc=kc,
                                    interpret=False)
     return jax.vmap(fn)(x, d)
@@ -202,6 +213,8 @@ def delta_spmm_segments(x_sorted: jnp.ndarray, d: PackedDelta,
         tb_eff = min(t["tb"], max(_pow2_floor(T), 8))
     x2, T = _pad_rows(x_sorted, tb_eff)
     ob_eff = _col_tile(d.h_out, t["ob"])
+    _note("delta_spmm_segments", formulation="segments-pallas",
+          residency="packed", tb=tb_eff, ob=ob_eff, kc=t["kc"])
     dp = _pad_cols(d, ob_eff)
     scale = jnp.asarray(d.scale, jnp.float32).reshape(-1, 1)
     zero = jnp.asarray(d.zero, jnp.int32).reshape(-1, 1)
@@ -280,6 +293,9 @@ def delta_correction_sharded(x: jnp.ndarray, d: PackedDelta, mesh, *,
     t_glob = _tiles(d, tb, ob, None)
     tb, ob = t_glob["tb"], t_glob["ob"]
     kc = t_glob["kc"]
+    _note("delta_correction_sharded", sharded=True, model_shards=int(n),
+          per_shard_segments=segments is not None
+          and jnp.ndim(segments[0]) == 2)
 
     if segments is not None:
         seg_rows, seg_offsets = segments

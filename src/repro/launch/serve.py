@@ -95,6 +95,21 @@ def main():
                          "tenants' dequantized f32 delta values stay "
                          "resident (LRU) and decode steps skip the "
                          "per-step unpack; 0 disables the tier")
+    ap.add_argument("--trace-out", metavar="FILE", default=None,
+                    help="write a Chrome-trace/Perfetto JSON of the run "
+                         "(request lifecycle spans + per-decode-step path "
+                         "attribution; open at https://ui.perfetto.dev)")
+    ap.add_argument("--trace-sample", type=int, default=1,
+                    help="keep every Nth decode-step span in the trace "
+                         "(request spans are always kept)")
+    ap.add_argument("--telemetry-snapshot-secs", type=float, default=0.0,
+                    help="write a JSON telemetry snapshot (metrics + SLO "
+                         "counters) every N seconds of engine time; 0 "
+                         "disables")
+    ap.add_argument("--telemetry-out", metavar="FILE",
+                    default="telemetry.json",
+                    help="snapshot file for --telemetry-snapshot-secs "
+                         "(atomically replaced on each write)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
@@ -128,6 +143,19 @@ def main():
             "residency_budget_bytes": residency_bytes_from_mb(
                 args.residency_mb),
         }
+        if not default_path:
+            # observability rides the MAIN engine only — the identity
+            # reference stays untraced so the comparison itself shows up
+            # as one clean engine in the trace
+            if args.trace_out:
+                from repro.serve.trace import Tracer
+                kw["trace"] = Tracer(step_sample=args.trace_sample)
+            if args.telemetry_snapshot_secs > 0:
+                from repro.serve.telemetry import (SLOCounters,
+                                                   TelemetrySnapshotWriter)
+                kw["slo"] = SLOCounters()
+                kw["telemetry"] = TelemetrySnapshotWriter(
+                    args.telemetry_out, args.telemetry_snapshot_secs)
         eng_ = ContinuousEngine(cfg, base, n_slots=args.slots,
                                 max_seq=args.max_seq, mesh=mesh_, **kw)
         for name, deltas, report in tenants:
@@ -219,6 +247,22 @@ def main():
                   f"({(r_.get('allocated_bytes') or 0) / 1e6:.2f}MB "
                   f"allocated), hit rate {hr}, {r_['value_steps']} value / "
                   f"{r_['packed_steps']} packed steps")
+
+    if eng.trace is not None:
+        trace = eng.trace.export(args.trace_out)
+        from repro.serve.trace import validate_chrome_trace
+        problems = validate_chrome_trace(trace)
+        if problems:
+            raise SystemExit("emitted trace failed validation: "
+                             + "; ".join(problems))
+        n_spans = sum(1 for e in trace["traceEvents"] if e.get("ph") == "X")
+        print(f"trace: {args.trace_out} ({n_spans} spans, "
+              f"{eng.trace.n_request_spans} requests)", flush=True)
+    if eng.telemetry is not None:
+        # final snapshot at drain so the file always reflects the full run
+        eng.telemetry.write(rep["wall_time_s"], eng._telemetry_payload())
+        print(f"telemetry: {args.telemetry_out} "
+              f"({eng.telemetry.n_written} snapshots)", flush=True)
 
     store = eng.store
     base_bytes = tree_bytes(base)

@@ -46,6 +46,7 @@ from repro.core.pack import PackedDelta, decode_values
 from repro.models import lm
 from repro.serve.kv import SlotKVCache
 from repro.serve.metrics import Metrics
+from repro.serve.trace import EventBus, attribution, path_label
 from repro.serve.scheduler import (
     LengthBuckets,
     Request,
@@ -307,6 +308,15 @@ class ContinuousEngine:
     the byte budget (LRU demotion) and decode steps whose tenants are
     all resident skip the per-step unpack; steps that are not fall back
     to the packed path. Token-identical either way.
+
+    ``trace=`` (a :class:`~repro.serve.trace.Tracer`), ``slo=`` (a
+    :class:`~repro.serve.telemetry.SLOCounters`) and ``telemetry=`` (a
+    :class:`~repro.serve.telemetry.TelemetrySnapshotWriter`) attach
+    observability: every hook site emits one typed event on
+    ``self.bus`` and all consumers — including ``Metrics`` itself —
+    read that same stream. Timestamps come exclusively from the
+    injectable clock, so traces are deterministic under
+    ``VirtualClock``.
     """
 
     def __init__(self, cfg: ArchConfig, base_params: Any, *,
@@ -316,7 +326,8 @@ class ContinuousEngine:
                  slot_dispatch: str = "segments",
                  shard_deltas: str = "auto",
                  admission="occupancy",
-                 residency_budget_bytes: Optional[int] = None):
+                 residency_budget_bytes: Optional[int] = None,
+                 trace=None, slo=None, telemetry=None):
         if cfg.family in ("encdec", "vlm"):
             raise ValueError(
                 f"continuous batching does not support family={cfg.family!r} "
@@ -380,6 +391,18 @@ class ContinuousEngine:
                               data_shards=data)
         self.metrics = Metrics(n_slots, data_shards=data)
         self.clock = clock
+        # Observability: every hook site emits one typed event on the
+        # bus; Metrics, the Tracer and SLOCounters are all plain
+        # consumers of the same stream (serve.trace). `telemetry` is a
+        # TelemetrySnapshotWriter driven by engine time in run().
+        self.trace = trace
+        self.slo = slo
+        self.telemetry = telemetry
+        self.bus = EventBus([self.metrics, trace, slo])
+        # memoised path-attribution notes per jit call signature: the
+        # dispatch layers only report while jax traces, so cached
+        # executions replay the notes recorded at trace time
+        self._path_notes: dict = {}
         # pre-decoded delta residency: built lazily alongside the tenant
         # stack (it mirrors the stacked tree's shapes) and only under the
         # segments dispatch — the per-row path has no values formulation
@@ -511,9 +534,13 @@ class ContinuousEngine:
                 f"({max_new_tokens}) exceeds max_seq={self.max_seq}")
         if tenant is not None:
             self.store.get(tenant)   # KeyError early for unknown tenants
-        return self.queue.submit(tenant, prompt, max_new_tokens=max_new_tokens,
-                                 stop_token=stop_token, arrival=arrival,
-                                 deadline=deadline, on_token=on_token)
+        req = self.queue.submit(tenant, prompt, max_new_tokens=max_new_tokens,
+                                stop_token=stop_token, arrival=arrival,
+                                deadline=deadline, on_token=on_token)
+        self.bus.emit("submit", req.arrival, rid=req.rid, tenant=tenant,
+                      prompt_len=len(prompt), max_new_tokens=max_new_tokens,
+                      deadline=deadline)
+        return req
 
     # -- scheduling core ----------------------------------------------------
     def _now(self) -> float:
@@ -547,19 +574,33 @@ class ContinuousEngine:
             deltas = self._zero_tree    # None when no tenants registered
         row_cache = lm.init_cache(self.cfg, 1, self.max_seq)
         self.prefill_shapes.add(bucket)
-        logits, row_cache = self._prefill(
-            self.base, {"tokens": jnp.asarray(tokens),
-                        "positions": jnp.asarray(positions)},
-            row_cache, deltas)
+        sig = ("prefill", bucket)
+        with attribution() as notes:
+            logits, row_cache = self._prefill(
+                self.base, {"tokens": jnp.asarray(tokens),
+                            "positions": jnp.asarray(positions)},
+                row_cache, deltas)
+        if notes:   # dispatch sites only report while jax traces
+            self.bus.emit("jit_trace", now, signature=sig, site="prefill",
+                          first=sig not in self._path_notes,
+                          notes=list(notes))
+            self._path_notes[sig] = list(notes)
         self.kv.insert(slot, row_cache)
 
         first = int(np.asarray(jnp.argmax(logits, axis=-1))[0])
         t_first = self._now()
-        self.metrics.record_admit(req.tenant, now - req.arrival)
-        self.metrics.record_first_token(req.tenant, t_first - req.arrival)
-        self.metrics.record_token(req.tenant)
+        slack = None if req.deadline is None else req.deadline - now
+        self.bus.emit("admit", now, rid=req.rid, tenant=req.tenant, slot=slot,
+                      wait=now - req.arrival, deadline_slack=slack,
+                      prompt_len=L, bucket=bucket)
+        self.bus.emit("prefill", t_first, rid=req.rid, tenant=req.tenant,
+                      t_start=now, prompt_len=L, bucket=bucket, slot=slot)
+        self.bus.emit("first_token", t_first, rid=req.rid, tenant=req.tenant,
+                      ttft=t_first - req.arrival)
+        self.bus.emit("token", t_first, rid=req.rid, tenant=req.tenant)
         if self.data > 1:
-            self.metrics.record_shard_token(self.sched.shard_of(slot))
+            self.bus.emit("shard_token", t_first,
+                          shard=self.sched.shard_of(slot))
         req.t_first_token = t_first
         fin = req.emit(first)
 
@@ -575,7 +616,12 @@ class ContinuousEngine:
         state = self.sched.slots[slot]
         req = state.request
         req.t_done = now
-        self.metrics.record_done(req.tenant, now - req.arrival)
+        ttft = None if req.t_first_token is None \
+            else req.t_first_token - req.arrival
+        slack = None if req.deadline is None else req.deadline - now
+        self.bus.emit("done", now, rid=req.rid, tenant=req.tenant,
+                      latency=now - req.arrival, ttft=ttft,
+                      n_tokens=len(req.tokens), deadline_slack=slack)
         self.sched.release(slot)
         self.kv.release(slot)
         # park the freed slot on tenant row 0 so stale rows don't inflate
@@ -626,18 +672,28 @@ class ContinuousEngine:
             sd = wrap_slot_deltas(self._stacked, jnp.asarray(self._row),
                                   segments=seg, values=values,
                                   res_map=res_map)
-        nxt, new_cache = self._decode(
-            self.base, self.kv.cache, jnp.asarray(self._tok[:, None]),
-            jnp.asarray(self._pos), sd)
+        sig = ("decode", sd is not None, bool(res_used))
+        with attribution() as notes:
+            nxt, new_cache = self._decode(
+                self.base, self.kv.cache, jnp.asarray(self._tok[:, None]),
+                jnp.asarray(self._pos), sd)
+        if notes:   # non-empty notes == this call (re)traced under jit
+            self.bus.emit("jit_trace", now, signature=sig, site="decode",
+                          first=sig not in self._path_notes,
+                          notes=list(notes))
+            self._path_notes[sig] = list(notes)
+        path_notes = self._path_notes.get(sig, [])
         self.kv.update(new_cache)
         nxt = np.asarray(nxt)
         t = self._now()
-        self.metrics.record_step(
-            len(active),
+        self.bus.emit(
+            "step", t, t_start=now, n_active=len(active),
             shard_active=self.sched.shard_occupancy() if self.data > 1
             else None,
             shard_unique=self.sched.shard_unique_tenants(self._row),
-            residency_used=res_used)
+            residency_used=res_used,
+            path="base" if sd is None else path_label(path_notes),
+            notes=path_notes, recompiled=bool(notes))
         for slot in active:
             state = self.sched.slots[slot]
             req = state.request
@@ -647,9 +703,10 @@ class ContinuousEngine:
             state.next_token = tok
             state.pos = int(self._pos[slot])
             fin = req.emit(tok)
-            self.metrics.record_token(req.tenant)
+            self.bus.emit("token", t, rid=req.rid, tenant=req.tenant)
             if self.data > 1:
-                self.metrics.record_shard_token(self.sched.shard_of(slot))
+                self.bus.emit("shard_token", t,
+                              shard=self.sched.shard_of(slot))
             if fin:
                 self._finish(slot, t)
 
@@ -667,11 +724,16 @@ class ContinuousEngine:
 
     def run(self, max_steps: int = 1_000_000) -> Metrics:
         """Drain the queue and all slots; returns the metrics collector."""
-        self.metrics.start(self._now())
+        self.bus.emit("start", self._now())
         for _ in range(max_steps):
             if not len(self.queue) and not self.sched.n_active:
                 break
-            worked = self.step(self._now())
+            now = self._now()
+            worked = self.step(now)
+            if self.telemetry is not None:
+                # driven by the same `now` as the step: zero extra clock
+                # reads, deterministic snapshot times under VirtualClock
+                self.telemetry.maybe_write(now, self._telemetry_payload)
             if not worked:
                 # nothing active and no arrived request: jump (virtual
                 # clock) or sleep (real clock) to the next arrival
@@ -684,17 +746,30 @@ class ContinuousEngine:
                     time.sleep(max(0.0, min(0.01, nxt - self._now())))
         else:
             raise RuntimeError(f"serve loop did not drain in {max_steps} steps")
-        self.metrics.stop(self._now())
+        self.bus.emit("stop", self._now())
         if self.residency is not None:
             self.metrics.residency = self.residency.stats()
         return self.metrics
+
+    def _telemetry_payload(self) -> dict:
+        """Snapshot body for the periodic telemetry writer."""
+        if self.residency is not None:
+            self.metrics.residency = self.residency.stats()
+        payload = {"metrics": self.metrics.report()}
+        if self.slo is not None:
+            payload["slo"] = self.slo.report()
+        return payload
 
     def reset_metrics(self) -> None:
         """Fresh metrics collector (e.g. after jit warmup), same engine.
 
         Residency *counters* reset with the metrics window; resident
-        rows stay warm (they are engine state, like compiled jits)."""
+        rows stay warm (they are engine state, like compiled jits). The
+        event bus is rebuilt around the new collector; an attached
+        tracer/SLO consumer keeps its history (a trace spans the whole
+        engine lifetime, like the compiled jits do)."""
         self.metrics = Metrics(self.n_slots, data_shards=self.data)
+        self.bus = EventBus([self.metrics, self.trace, self.slo])
         if self.residency is not None:
             self.residency.reset_counters()
         self._t0 = None

@@ -3,6 +3,19 @@
 Collected host-side by the continuous engine with an injectable clock so
 tests and benchmarks get deterministic numbers. ``report()`` returns a
 plain-dict snapshot suitable for JSON (BENCH_serve.json).
+
+Since the telemetry PR, ``Metrics`` is a **consumer of the engine's
+event stream** (``serve.trace.EventBus``): the engine emits one typed
+event per hook site and metrics, tracing and SLO counters all read the
+same events — one source of truth. The ``record_*`` methods remain the
+public surface (and are what ``consume`` dispatches to), so direct
+callers keep working.
+
+Per-tenant samples (TTFT, queue wait, latency) are held in
+:class:`~repro.serve.telemetry.StreamingHistogram`\\ s: exact percentiles
+below the histogram's cap, fixed log-bucket counts above it — a
+million-request run is bounded memory instead of three unbounded lists
+per tenant.
 """
 from __future__ import annotations
 
@@ -11,30 +24,28 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-
-def _pct(xs: List[float], q: float) -> Optional[float]:
-    if not xs:
-        return None
-    return float(np.percentile(np.asarray(xs, np.float64), q))
+from repro.serve.telemetry import StreamingHistogram
 
 
 @dataclass
 class TenantStats:
     n_requests: int = 0
     n_tokens: int = 0
-    ttfts: List[float] = field(default_factory=list)      # arrival -> first token
-    queue_waits: List[float] = field(default_factory=list)  # arrival -> admit
-    latencies: List[float] = field(default_factory=list)  # arrival -> done
+    # arrival -> first token / arrival -> admit / arrival -> done
+    ttfts: StreamingHistogram = field(default_factory=StreamingHistogram)
+    queue_waits: StreamingHistogram = field(default_factory=StreamingHistogram)
+    latencies: StreamingHistogram = field(default_factory=StreamingHistogram)
 
-    def report(self, wall_time: float) -> dict:
+    def report(self, wall: float) -> dict:
         return {
             "requests": self.n_requests,
             "tokens": self.n_tokens,
-            "tokens_per_sec": self.n_tokens / wall_time if wall_time > 0 else None,
-            "ttft_p50": _pct(self.ttfts, 50), "ttft_p95": _pct(self.ttfts, 95),
-            "queue_wait_p50": _pct(self.queue_waits, 50),
-            "latency_p50": _pct(self.latencies, 50),
-            "latency_p95": _pct(self.latencies, 95),
+            "tokens_per_sec": self.n_tokens / wall if wall > 0 else None,
+            "ttft_p50": self.ttfts.percentile(50),
+            "ttft_p95": self.ttfts.percentile(95),
+            "queue_wait_p50": self.queue_waits.percentile(50),
+            "latency_p50": self.latencies.percentile(50),
+            "latency_p95": self.latencies.percentile(95),
         }
 
 
@@ -49,7 +60,9 @@ class Metrics:
     dequantizes, the observable the tenant-affinity admission policy
     exists to shrink. ``residency`` (set by the engine at drain time)
     carries the pre-decoded value-cache stats, and the per-step
-    value-path/packed-path split is tallied here.
+    value-path/packed-path split is tallied here. ``decode_paths``
+    counts decode steps per attributed dispatch path (see
+    ``serve.trace.path_label``).
     """
 
     def __init__(self, n_slots: int, data_shards: int = 1):
@@ -70,6 +83,9 @@ class Metrics:
         self.residency_value_steps = 0
         self.residency_packed_steps = 0
         self.residency: Optional[dict] = None   # DeltaResidency.stats()
+        # decode steps per attributed dispatch path label
+        self.decode_paths: Dict[str, int] = {}
+        self.jit_traces = 0
         self.t_start: Optional[float] = None
         self.t_end: Optional[float] = None
 
@@ -77,7 +93,35 @@ class Metrics:
         key = name if name is not None else "__base__"
         return self.tenants.setdefault(key, TenantStats())
 
-    # -- recording hooks (driven by the engine) -----------------------------
+    # -- event-stream consumer ----------------------------------------------
+    def consume(self, ev) -> None:
+        """Apply one ``serve.trace.ServeEvent`` — the engine's event bus
+        calls this; each kind maps onto the record hook below."""
+        kind, a = ev.kind, ev.attrs
+        if kind == "step":
+            self.record_step(a["n_active"], a.get("shard_active"),
+                             a.get("shard_unique"), a.get("residency_used"))
+            path = a.get("path")
+            if path is not None:
+                self.decode_paths[path] = self.decode_paths.get(path, 0) + 1
+        elif kind == "token":
+            self.record_token(a.get("tenant"), a.get("n", 1))
+        elif kind == "admit":
+            self.record_admit(a.get("tenant"), a["wait"])
+        elif kind == "first_token":
+            self.record_first_token(a.get("tenant"), a["ttft"])
+        elif kind == "done":
+            self.record_done(a.get("tenant"), a["latency"])
+        elif kind == "shard_token":
+            self.record_shard_token(a["shard"], a.get("n", 1))
+        elif kind == "start":
+            self.start(ev.t)
+        elif kind == "stop":
+            self.stop(ev.t)
+        elif kind == "jit_trace":
+            self.jit_traces += 1
+
+    # -- recording hooks ----------------------------------------------------
     def start(self, now: float) -> None:
         if self.t_start is None:
             self.t_start = now
@@ -88,17 +132,17 @@ class Metrics:
     def record_admit(self, tenant: Optional[str], wait: float) -> None:
         t = self._tenant(tenant)
         t.n_requests += 1
-        t.queue_waits.append(wait)
+        t.queue_waits.record(wait)
         self.n_prefills += 1
 
     def record_first_token(self, tenant: Optional[str], ttft: float) -> None:
-        self._tenant(tenant).ttfts.append(ttft)
+        self._tenant(tenant).ttfts.record(ttft)
 
     def record_token(self, tenant: Optional[str], n: int = 1) -> None:
         self._tenant(tenant).n_tokens += n
 
     def record_done(self, tenant: Optional[str], latency: float) -> None:
-        self._tenant(tenant).latencies.append(latency)
+        self._tenant(tenant).latencies.record(latency)
 
     def record_step(self, n_active: int,
                     shard_active: Optional[List[int]] = None,
@@ -127,6 +171,10 @@ class Metrics:
                 self.residency_packed_steps += 1
 
     def record_shard_token(self, shard: int, n: int = 1) -> None:
+        if not 0 <= shard < self.data_shards:
+            raise ValueError(
+                f"shard {shard} out of range for {self.data_shards} "
+                f"data shards")
         self.shard_tokens[shard] += n
 
     # -- reporting ----------------------------------------------------------
@@ -176,9 +224,12 @@ class Metrics:
     def report(self) -> dict:
         wall = 0.0
         if self.t_start is not None and self.t_end is not None:
-            wall = self.t_end - self.t_start
+            # clamp: stop() never called after a reset leaves t_end from
+            # a previous epoch; 0.0 beats a negative wall time downstream
+            wall = max(0.0, self.t_end - self.t_start)
         total_tokens = sum(t.n_tokens for t in self.tenants.values())
-        all_ttfts = [x for t in self.tenants.values() for x in t.ttfts]
+        pooled_ttft = StreamingHistogram.merged(
+            [t.ttfts for t in self.tenants.values() if t.ttfts.n])
         uniq = self.unique_tenants_per_shard_mean
         residency = None
         if self.residency is not None \
@@ -203,7 +254,8 @@ class Metrics:
             "tokens_per_sec": total_tokens / wall if wall > 0 else None,
             # pooled across all requests (a median of per-tenant medians
             # is not a p50)
-            "ttft_p50": _pct(all_ttfts, 50),
-            "ttft_p95": _pct(all_ttfts, 95),
+            "ttft_p50": pooled_ttft.percentile(50),
+            "ttft_p95": pooled_ttft.percentile(95),
+            "decode_paths": dict(sorted(self.decode_paths.items())) or None,
             "tenants": {k: t.report(wall) for k, t in sorted(self.tenants.items())},
         }
