@@ -125,6 +125,7 @@ def bench_shape(name, h_in, h_out, h_g, alpha, k_bits, t_dec, t_pre) -> dict:
             fallback.correction_nd(x, p)
         sel = next((n for n in notes if n["site"] == "correction"), None)
         out[f"{phase}_selected"] = sel["formulation"] if sel else None
+        out[f"{phase}_codec"] = sel.get("codec") if sel else None
         out[f"{phase}_xla_dense_us"] = _time(
             lambda x: fallback.dense_correction(x, p), x)
         out[f"{phase}_xla_gather_us"] = _time(
@@ -152,6 +153,8 @@ def bench_shape(name, h_in, h_out, h_g, alpha, k_bits, t_dec, t_pre) -> dict:
             out[f"segments_{tag}_selected"] = next(
                 (n["formulation"] for n in notes if "formulation" in n),
                 None)
+            out[f"segments_{tag}_codec"] = next(
+                (n["codec"] for n in notes if "codec" in n), None)
     finally:
         set_slot_dispatch(prev)
 

@@ -148,6 +148,11 @@ def continuous_bench(n_tenants: int, n_requests: int = 16, max_new: int = 8,
         "ttft_p50_ms": 1e3 * rep["ttft_p50"] if rep["ttft_p50"] is not None else None,
         "batch_occupancy": rep["batch_occupancy"],
         "prefill_shapes": sorted(eng.prefill_shapes),
+        # which codec(s) the decode path actually dispatched (from the
+        # per-jit-signature attribution notes) — one entry per codec seen
+        "decode_codecs": sorted({n["codec"]
+                                 for notes in eng._path_notes.values()
+                                 for n in notes if "codec" in n}),
         "delta_bytes_per_tenant": eng.store.total_bytes() / n_tenants,
         "base_bytes": tree_bytes(base),
         "tenants": rep["tenants"],     # per-tenant throughput/TTFT/latency
@@ -330,12 +335,13 @@ def compare_against(fresh: dict, baseline_path: str, tolerance: float) -> list:
         b_sh = baseline.get(row)
         f_sh = fresh.get(row)
         # The data-parallel row emulates shard_map collectives over BOTH
-        # mesh axes on fake CPU devices; its wall-clock shows >3x
-        # same-machine spread, so it gates at double the base tolerance.
+        # mesh axes on fake CPU devices; its wall-clock is noisier than
+        # the single-mesh rows, so it gates at 1.5x the base tolerance
+        # (tightened from the original 2x once the row's spread settled).
         # continuous_sharded keeps its original (base) sensitivity — its
         # gate predates this row and loosening it here would silently
         # blind CI to model-sharded decode regressions.
-        mesh_tol = tolerance * (2.0 if row == "continuous_data2"
+        mesh_tol = tolerance * (1.5 if row == "continuous_data2"
                                 else 1.0)
         if b_sh and f_sh and b_sh.get("n_requests") == f_sh.get("n_requests") \
                 and b_sh.get("devices") == f_sh.get("devices") \

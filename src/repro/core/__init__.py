@@ -1,8 +1,10 @@
 """DeltaDQ core: the paper's contribution as composable JAX modules."""
 from repro.core.apply import (
+    MultiSlotDelta,
     SlotDelta,
     apply_linear,
     apply_linear_batched,
+    combine_slot_deltas,
     delta_matmul,
     dget,
     dindex,
@@ -14,12 +16,31 @@ from repro.core.apply import (
     wrap_slot_deltas,
     zero_delta_like,
 )
+from repro.core.codecs import (
+    BitDeltaCodec,
+    BitDeltaLeaf,
+    BitDeltaSpec,
+    DeltaCodec,
+    DeltaDQCodec,
+    LowRankCodec,
+    LowRankLeaf,
+    LowRankSpec,
+    codec_for_spec,
+    codec_names,
+    codec_of_leaf,
+    get_codec,
+    reconstruct_dense_any,
+    register_codec,
+    runtime_delta_tree,
+)
 from repro.core.compress import (
     CompressionReport,
     DeltaDQSpec,
     compress,
     compress_leaf,
     decompress,
+    delta_axes,
+    delta_specs,
     is_compressible,
 )
 from repro.core.dropout import (

@@ -289,7 +289,7 @@ class SlotDelta:
             d.idx[:, i], d.codes[:, i],
             d.scale[:, i] if jnp.ndim(d.scale) >= 2 else d.scale,
             d.zero[:, i] if jnp.ndim(d.zero) >= 2 else d.zero,
-            d.h_in, d.h_out, d.h_g, d.keep, d.alpha, d.k_bits, d.m),
+            d.h_in, d.h_out, d.h_g, d.keep, d.alpha, d.k_bits, d.m, d.codec),
             self.slots, self.segments,
             self.values[:, i] if self.values is not None else None,
             self.res_map)
@@ -302,7 +302,43 @@ class SlotDelta:
             d.idx[s], d.codes[s],
             jnp.asarray(d.scale, jnp.float32)[s],
             jnp.asarray(d.zero, jnp.int32)[s],
-            d.h_in, d.h_out, d.h_g, d.keep, d.alpha, d.k_bits, d.m)
+            d.h_in, d.h_out, d.h_g, d.keep, d.alpha, d.k_bits, d.m, d.codec)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class MultiSlotDelta:
+    """Mixed-codec decode: one :class:`SlotDelta` part per codec group.
+
+    The engine cannot stack tenants whose runtime packings differ (codec,
+    group size, quantization width...), so it stacks each compatible
+    *group* separately and routes every group's rows through that group's
+    own segment layout. Rows a group does not own map to its row 0 — the
+    zero delta — so the per-leaf correction is simply the SUM of the
+    parts' corrections: exactly one part contributes the row's real
+    correction and every other part contributes an exact 0.0, keeping
+    mixed-codec decode token-identical to serving each tenant alone.
+    """
+    parts: tuple
+
+    def tree_flatten(self):
+        return tuple(self.parts), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(tuple(children))
+
+    def index(self, i) -> "MultiSlotDelta":
+        return MultiSlotDelta(tuple(p.index(i) for p in self.parts))
+
+
+def combine_slot_deltas(wrapped: list) -> Any:
+    """Merge per-group slot-wrapped trees (see ``wrap_slot_deltas``) into
+    one tree of :class:`MultiSlotDelta` leaves (identity for one group)."""
+    if len(wrapped) == 1:
+        return wrapped[0]
+    return jax.tree.map(lambda *ls: MultiSlotDelta(ls), *wrapped,
+                        is_leaf=lambda x: isinstance(x, SlotDelta))
 
 
 def _row_sharded(t: jnp.ndarray) -> jnp.ndarray:
@@ -406,6 +442,15 @@ def slot_delta_matmul(x: jnp.ndarray, sd: SlotDelta) -> jnp.ndarray:
 
 def delta_matmul(x: jnp.ndarray, d) -> jnp.ndarray:
     """x [..., h_in] @ dequant(delta) [h_in, h_out] -> [..., h_out]."""
+    if isinstance(d, MultiSlotDelta):
+        # mixed-codec groups: sum the per-group corrections in f32. Each
+        # row is owned by exactly one group; the others map it to the
+        # zero-delta row, contributing an exact 0.0 (scale and codes are
+        # all zero), so the sum preserves the token-identity contract.
+        y = slot_delta_matmul(x, d.parts[0]).astype(jnp.float32)
+        for p in d.parts[1:]:
+            y = y + slot_delta_matmul(x, p).astype(jnp.float32)
+        return y.astype(x.dtype)
     if isinstance(d, SlotDelta):
         return slot_delta_matmul(x, d)
     if not d.stack_shape():
@@ -449,7 +494,7 @@ def apply_linear(x: jnp.ndarray, w: jnp.ndarray, d: Optional[PackedDelta] = None
 def apply_linear_batched(x: jnp.ndarray, w: jnp.ndarray, d: Optional[PackedDelta] = None) -> jnp.ndarray:
     """Batched over a leading stack dim (e.g. MoE experts):
     x [E, ..., h_in], w [E, h_in, h_out], delta stacked [E, ...]."""
-    if isinstance(d, SlotDelta):
+    if isinstance(d, (SlotDelta, MultiSlotDelta)):
         # Expert buffers mix tokens from many slots; a per-row gather has no
         # meaning here. The serving engine must group such archs per tenant.
         raise NotImplementedError(
@@ -492,7 +537,7 @@ def dindex(deltas: Any, i) -> Any:
     """Slice every PackedDelta in a deltas subtree at stacked-layer index i."""
     if deltas is None:
         return None
-    if isinstance(deltas, SlotDelta):
+    if isinstance(deltas, (SlotDelta, MultiSlotDelta)):
         return deltas.index(i)
     if isinstance(deltas, PackedDelta):
         return deltas.index(i)
@@ -519,7 +564,7 @@ def zero_delta_like(deltas: Any) -> Any:
             jnp.zeros_like(d.idx), jnp.zeros_like(d.codes),
             jnp.zeros(jnp.shape(d.scale), jnp.float32),
             jnp.zeros(jnp.shape(d.zero), jnp.int32),
-            d.h_in, d.h_out, d.h_g, d.keep, d.alpha, d.k_bits, d.m)
+            d.h_in, d.h_out, d.h_g, d.keep, d.alpha, d.k_bits, d.m, d.codec)
 
     return jax.tree.map(z, deltas, is_leaf=_is_pd)
 
@@ -542,10 +587,10 @@ def stack_tenant_deltas(trees: list) -> Any:
     def stack(*leaves):
         d0 = leaves[0]
         for d in leaves[1:]:
-            if (d.h_in, d.h_out, d.h_g, d.keep, d.k_bits, d.m,
+            if (d.h_in, d.h_out, d.h_g, d.keep, d.k_bits, d.m, d.codec,
                     d.idx.shape, d.codes.shape) != \
                (d0.h_in, d0.h_out, d0.h_g, d0.keep, d0.k_bits, d0.m,
-                    d0.idx.shape, d0.codes.shape):
+                    d0.codec, d0.idx.shape, d0.codes.shape):
                 raise ValueError("tenant deltas use different packing specs; "
                                  "cannot stack for slot dispatch")
         return PackedDelta(
@@ -553,7 +598,8 @@ def stack_tenant_deltas(trees: list) -> Any:
             jnp.stack([d.codes for d in leaves]),
             jnp.stack([jnp.asarray(d.scale, jnp.float32) for d in leaves]),
             jnp.stack([jnp.asarray(d.zero, jnp.int32) for d in leaves]),
-            d0.h_in, d0.h_out, d0.h_g, d0.keep, d0.alpha, d0.k_bits, d0.m)
+            d0.h_in, d0.h_out, d0.h_g, d0.keep, d0.alpha, d0.k_bits, d0.m,
+            d0.codec)
 
     return jax.tree.map(stack, *trees, is_leaf=_is_pd)
 
@@ -582,5 +628,10 @@ def merge_delta(params: Any, deltas: Any) -> Any:
                 for k, v in params.items()}
     if deltas is None:
         return params
-    assert isinstance(deltas, PackedDelta)
-    return (params.astype(jnp.float32) + reconstruct_dense(deltas)).astype(params.dtype)
+    if isinstance(deltas, PackedDelta):
+        dense = reconstruct_dense(deltas)
+    else:
+        # other codecs' leaves (BitDelta, low-rank residual, ...)
+        from repro.core.codecs import reconstruct_dense_any
+        dense = reconstruct_dense_any(deltas)
+    return (params.astype(jnp.float32) + dense).astype(params.dtype)

@@ -1,0 +1,629 @@
+"""Pluggable delta codecs: one compression interface, many formats.
+
+A :class:`DeltaCodec` packages everything the rest of the system needs
+to know about one delta-compression format:
+
+* ``compress_leaf``       — (base, ft) weight pair -> codec leaf
+* ``reconstruct_dense``   — codec leaf -> f32 [..., h_in, h_out] delta
+* ``decode_values``       — per-row kept values of the *runtime* form
+* ``storage_bits``        — paper/honest storage accounting per leaf
+* ``to_storage_parts`` / ``from_storage_parts`` — offline (numpy)
+  checkpoint layout round-trip
+* ``leaf_spec`` / ``leaf_axes`` — static ShapeDtypeStruct twins +
+  logical-axes twins for the multi-pod dry-run
+* ``runtime_packed``      — codec leaf -> :class:`PackedDelta`
+
+The last method is the serving contract: every codec lowers its leaf to
+the structured :class:`~repro.core.pack.PackedDelta` runtime layout
+(dense-as-structured when the codec has no sparsity), tagged with the
+codec's name, so ALL existing decode machinery — per-row gather,
+unique-tenant segments, shard_map'd mesh corrections, the residency
+value tier — serves any codec unchanged. The lowering must be
+*bit-faithful*: ``pack.reconstruct_dense(runtime_packed(leaf))`` equals
+``codec.reconstruct_dense(leaf)`` exactly, which is what extends the
+token-identity contract to mixed-codec serving.
+
+Registered codecs:
+
+* ``deltadq``  — the paper's group-wise dropout + separate quantization
+  (the registry default; :class:`DeltaDQSpec`).
+* ``bitdelta`` — 1-bit sign bitmap + per-tensor scale
+  (arXiv 2402.10193; :class:`BitDeltaSpec`). delta ~ scale * sign(delta)
+  with scale = mean |delta|.
+* ``lowrank``  — int-quantized dense core + rank-r f32 residual factors
+  (quantization + low-rank residual; :class:`LowRankSpec`).
+
+Register a new codec with :func:`register_codec`; ``compress(...,
+codec=<name>)`` and the per-leaf auto-picker pick it up automatically.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant
+from repro.core.dropout import groupwise_dropout_pack, keep_count
+from repro.core.pack import PackedDelta
+from repro.core import pack as pack_lib
+
+
+# ---------------------------------------------------------------------------
+# Specs (small frozen hyperparameter records; one per codec)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class DeltaDQSpec:
+    """DeltaDQ hyperparameters (group-wise dropout + separate quant)."""
+    alpha: float = 8.0            # dropout compression (keep-rate 1/alpha)
+    k_bits: Optional[int] = None  # None -> dropout only (paper's 2x..8x rows)
+    m: int = 1                    # separate-quantization parts
+    h_g: Optional[int] = None     # None -> use h_in (row-wise); search sets it
+    seed: int = 0
+
+    def ratio(self) -> float:
+        return quant.compression_ratio(self.alpha, self.k_bits, self.m)
+
+
+@dataclass(frozen=True)
+class BitDeltaSpec:
+    """BitDelta: sign bitmap + per-tensor scale = mean |delta|."""
+    seed: int = 0
+
+    def ratio(self) -> float:
+        return 16.0               # 1 bit per element vs bf16
+
+
+@dataclass(frozen=True)
+class LowRankSpec:
+    """Quantized dense core + rank-r f32 residual factors."""
+    rank: int = 8
+    k_bits: int = 4
+    seed: int = 0
+
+
+def _pick_hg(h_in: int, spec: DeltaDQSpec) -> int:
+    if spec.h_g is None:
+        return h_in
+    # clamp to a divisor of h_in: largest halving of h_g dividing h_in.
+    # Candidates below alpha are unsatisfiable (keep would round to 0 and
+    # halving only shrinks hg further), so detect that up front instead
+    # of walking to hg < 1 and raising a misleading divisibility error.
+    floor = max(spec.alpha, 1.0)
+    hg = min(spec.h_g, h_in)
+    if hg < floor:
+        raise ValueError(
+            f"unsatisfiable group size: requested h_g={spec.h_g} "
+            f"(clamped to {hg} for h_in={h_in}) is below alpha={spec.alpha}; "
+            f"every group must keep h_g/alpha >= 1 elements, so pick "
+            f"h_g >= alpha")
+    while h_in % hg:
+        hg //= 2
+        if hg < floor:
+            raise ValueError(
+                f"unsatisfiable group size: no halving of h_g={spec.h_g} "
+                f"both divides h_in={h_in} and stays >= alpha={spec.alpha}")
+    return int(hg)
+
+
+def _runtime_hg(h_in: int) -> int:
+    """Group size for dense-as-structured runtime lowering: the largest
+    divisor of h_in within the kernel envelope (h_g <= MAX_HG and, since
+    these lowerings keep every element, keep = h_g <= MAX_KEEP = 128)."""
+    for hg in range(min(h_in, 128), 0, -1):
+        if h_in % hg == 0:
+            return hg
+    return 1
+
+
+def _lead_scalar(lead: tuple, value, dtype):
+    """Per-tensor scalar in PackedDelta convention: a scalar without
+    leading stack dims, a [lead]-shaped array with them."""
+    if lead:
+        return jnp.full(lead, value, dtype)
+    return jnp.asarray(value, dtype)
+
+
+def _dense_as_structured(dense_vals: jnp.ndarray, codes: jnp.ndarray,
+                         scale, zero, h_in: int, h_out: int,
+                         k_bits: Optional[int], codec: str) -> PackedDelta:
+    """Wrap per-group values/codes [..., G, h_g, O] as a keep-everything
+    PackedDelta (idx = arange within each group)."""
+    hg = dense_vals.shape[-2]
+    idx = jnp.broadcast_to(
+        jnp.arange(hg, dtype=jnp.uint8)[:, None], dense_vals.shape[-2:])
+    idx = jnp.broadcast_to(idx, dense_vals.shape[:-2] + idx.shape)
+    return PackedDelta(
+        idx=idx, codes=codes, scale=scale, zero=zero,
+        h_in=h_in, h_out=h_out, h_g=hg, keep=hg,
+        alpha=1.0, k_bits=k_bits, m=1, codec=codec)
+
+
+# ---------------------------------------------------------------------------
+# Codec leaves for the non-DeltaDQ formats (registered pytrees)
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class BitDeltaLeaf:
+    """BitDelta-compressed delta for one [h_in, h_out] weight.
+
+    ``sign`` is the bit-packed (along h_in) sign bitmap, uint8
+    [..., ceil(h_in/8), h_out] with bit 1 = positive; ``scale`` is the
+    per-tensor mean |delta| (f32 scalar; stacked if leading dims).
+    """
+    sign: jnp.ndarray
+    scale: Any
+    h_in: int
+    h_out: int
+
+    def tree_flatten(self):
+        return (self.sign, self.scale), (self.h_in, self.h_out)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    def stack_shape(self) -> tuple[int, ...]:
+        return tuple(self.sign.shape[:-2])
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class LowRankLeaf:
+    """Quantized core + rank-r residual for one [h_in, h_out] weight.
+
+    ``codes`` are bit-packed (along h_in) k-bit core codes, uint8
+    [..., packed_len(h_in, k), h_out]; ``scale``/``zero`` the per-tensor
+    quant params; ``u`` [..., h_in, r] / ``v`` [..., r, h_out] the f32
+    residual factors of delta - dequant(core) (u absorbs the singular
+    values). Reconstruction: dequant(core) + u @ v.
+    """
+    codes: jnp.ndarray
+    scale: Any
+    zero: Any
+    u: jnp.ndarray
+    v: jnp.ndarray
+    h_in: int
+    h_out: int
+    k_bits: int
+    rank: int
+
+    def tree_flatten(self):
+        return ((self.codes, self.scale, self.zero, self.u, self.v),
+                (self.h_in, self.h_out, self.k_bits, self.rank))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    def stack_shape(self) -> tuple[int, ...]:
+        return tuple(self.codes.shape[:-2])
+
+
+# ---------------------------------------------------------------------------
+# The codec interface
+# ---------------------------------------------------------------------------
+class DeltaCodec:
+    """One delta-compression format behind the common interface.
+
+    Subclasses set ``name``, ``spec_cls`` and ``leaf_cls`` and implement
+    the methods below. ``storage_bits`` returns a dict with
+    ``value_bits`` (the paper's values-only convention) and
+    ``total_bits`` (honest: + indices/factors/metadata) for the whole
+    possibly-stacked leaf.
+    """
+
+    name: str = "?"
+    spec_cls: type = object
+    leaf_cls: type = object
+
+    def default_spec(self):
+        return self.spec_cls()
+
+    # -- compression --------------------------------------------------------
+    def compress_leaf(self, rng, base_leaf, ft_leaf, spec):
+        raise NotImplementedError
+
+    # -- decode -------------------------------------------------------------
+    def reconstruct_dense(self, leaf) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def runtime_packed(self, leaf) -> PackedDelta:
+        raise NotImplementedError
+
+    def decode_values(self, leaf) -> jnp.ndarray:
+        """Kept values [..., G, K, O] of the runtime form (the
+        codec-neutral seam the values-given segment dispatch consumes)."""
+        return pack_lib.decode_values(self.runtime_packed(leaf))
+
+    # -- storage ------------------------------------------------------------
+    def storage_bits(self, leaf) -> dict:
+        raise NotImplementedError
+
+    def to_storage_parts(self, leaf) -> tuple[Any, dict]:
+        raise NotImplementedError
+
+    def from_storage_parts(self, parts, meta: dict):
+        raise NotImplementedError
+
+    # -- static twins (multi-pod dry-run) -----------------------------------
+    def leaf_spec(self, leaf_sds, spec):
+        raise NotImplementedError
+
+    def leaf_axes(self, leaf_sds, axes, spec, model_axis_size: int):
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# DeltaDQ (the first registered codec; leaf IS the runtime layout)
+# ---------------------------------------------------------------------------
+class DeltaDQCodec(DeltaCodec):
+    name = "deltadq"
+    spec_cls = DeltaDQSpec
+    leaf_cls = PackedDelta
+
+    def default_spec(self):
+        # the launcher's 128x deployment point (alpha 8, k4, m8)
+        return DeltaDQSpec(alpha=8.0, k_bits=4, m=8, h_g=16)
+
+    def compress_leaf(self, rng, base_leaf, ft_leaf, spec: DeltaDQSpec):
+        delta = ft_leaf.astype(jnp.float32) - base_leaf.astype(jnp.float32)
+        hg = _pick_hg(delta.shape[-2], spec)
+        return groupwise_dropout_pack(rng, delta, h_g=hg, alpha=spec.alpha,
+                                      k_bits=spec.k_bits, m=spec.m)
+
+    def reconstruct_dense(self, leaf: PackedDelta) -> jnp.ndarray:
+        return pack_lib.reconstruct_dense(leaf)
+
+    def runtime_packed(self, leaf: PackedDelta) -> PackedDelta:
+        return leaf
+
+    def storage_bits(self, leaf: PackedDelta) -> dict:
+        stack = int(np.prod(leaf.stack_shape())) if leaf.stack_shape() else 1
+        vb = leaf.value_bits() * stack
+        return {"value_bits": vb, "total_bits": vb + leaf.index_bits() * stack}
+
+    def to_storage_parts(self, leaf: PackedDelta):
+        meta = {"codec": self.name, "h_in": leaf.h_in, "h_out": leaf.h_out,
+                "h_g": leaf.h_g, "keep": leaf.keep, "alpha": leaf.alpha,
+                "k_bits": leaf.k_bits, "m": leaf.m,
+                "scale": float(np.asarray(leaf.scale)),
+                "zero": int(np.asarray(leaf.zero))}
+        if leaf.k_bits is None:
+            assert not leaf.stack_shape(), "storage layer operates per-matrix"
+            parts = {"idx": np.asarray(leaf.idx),
+                     "values": np.asarray(leaf.codes)}
+            return parts, meta
+        return pack_lib.to_storage_parts(leaf), meta
+
+    def from_storage_parts(self, parts, meta: dict) -> PackedDelta:
+        if meta["k_bits"] is None:
+            hg = meta["h_g"]
+            idx_dtype = jnp.uint8 if hg <= 256 else jnp.int32
+            return PackedDelta(
+                idx=jnp.asarray(parts["idx"], idx_dtype),
+                codes=jnp.asarray(parts["values"], jnp.float32),
+                scale=jnp.float32(meta["scale"]),
+                zero=jnp.int32(meta["zero"]),
+                h_in=meta["h_in"], h_out=meta["h_out"], h_g=hg,
+                keep=meta["keep"], alpha=meta["alpha"], k_bits=None,
+                m=meta["m"])
+        return pack_lib.from_storage_parts(
+            parts, h_in=meta["h_in"], h_out=meta["h_out"], h_g=meta["h_g"],
+            keep=meta["keep"], alpha=meta["alpha"], k_bits=meta["k_bits"],
+            scale=meta["scale"], zero=meta["zero"])
+
+    def leaf_spec(self, leaf_sds, spec: DeltaDQSpec) -> PackedDelta:
+        shape = leaf_sds.shape
+        lead, (h_in, h_out) = shape[:-2], shape[-2:]
+        hg = _pick_hg(h_in, spec)
+        # the same helper real packing uses (dropout._check): shape-only
+        # dry-run specs can never drift from what packing actually produces
+        keep = keep_count(hg, spec.alpha)
+        G = h_in // hg
+        idx_dtype = jnp.uint8 if hg <= 256 else jnp.int32
+        if spec.k_bits is None:
+            codes = jax.ShapeDtypeStruct((*lead, G, keep, h_out), jnp.float32)
+        else:
+            kp = quant.packed_len(keep, spec.k_bits)
+            codes = jax.ShapeDtypeStruct((*lead, G, kp, h_out), jnp.uint8)
+        return PackedDelta(
+            idx=jax.ShapeDtypeStruct((*lead, G, keep, h_out), idx_dtype),
+            codes=codes,
+            scale=jax.ShapeDtypeStruct(lead, jnp.float32),
+            zero=jax.ShapeDtypeStruct(lead, jnp.int32),
+            h_in=h_in, h_out=h_out, h_g=hg, keep=keep,
+            alpha=spec.alpha, k_bits=spec.k_bits, m=spec.m)
+
+    def leaf_axes(self, leaf_sds, ax, spec: DeltaDQSpec,
+                  model_axis_size: int) -> PackedDelta:
+        d = self.leaf_spec(leaf_sds, spec)
+        lead_ax = tuple(ax[:-2])
+        in_ax, out_ax = ax[-2], ax[-1]
+        g_ax = in_ax if d.n_groups % max(model_axis_size, 1) == 0 else None
+        arr_ax = (*lead_ax, g_ax, None, out_ax)
+        return PackedDelta(
+            idx=arr_ax, codes=arr_ax, scale=lead_ax, zero=lead_ax,
+            h_in=d.h_in, h_out=d.h_out, h_g=d.h_g, keep=d.keep,
+            alpha=d.alpha, k_bits=d.k_bits, m=d.m)
+
+
+# ---------------------------------------------------------------------------
+# BitDelta: sign bitmap + per-tensor scale (arXiv 2402.10193)
+# ---------------------------------------------------------------------------
+class BitDeltaCodec(DeltaCodec):
+    name = "bitdelta"
+    spec_cls = BitDeltaSpec
+    leaf_cls = BitDeltaLeaf
+
+    def compress_leaf(self, rng, base_leaf, ft_leaf,
+                      spec: BitDeltaSpec) -> BitDeltaLeaf:
+        delta = ft_leaf.astype(jnp.float32) - base_leaf.astype(jnp.float32)
+        h_in, h_out = delta.shape[-2:]
+        lead_dims = delta.ndim - 2
+        scale = jnp.mean(jnp.abs(delta),
+                         axis=tuple(range(lead_dims, delta.ndim)))
+        sign = (delta >= 0).astype(jnp.uint8)     # 1 = +scale, 0 = -scale
+        packed = quant.pack_bits(sign, 1, axis=sign.ndim - 2)
+        return BitDeltaLeaf(sign=packed, scale=scale.astype(jnp.float32),
+                            h_in=h_in, h_out=h_out)
+
+    def _sign_codes(self, leaf: BitDeltaLeaf) -> jnp.ndarray:
+        """Unpacked {0, 1} sign codes [..., h_in, h_out] int32."""
+        return quant.unpack_bits(leaf.sign, 1, leaf.h_in,
+                                 axis=leaf.sign.ndim - 2)
+
+    def reconstruct_dense(self, leaf: BitDeltaLeaf) -> jnp.ndarray:
+        # EXACTLY the runtime decode math ((q - zero) * scale with
+        # q = 2*sign, zero = 1) so the lowering is bit-faithful
+        q = 2 * self._sign_codes(leaf)
+        s = jnp.asarray(leaf.scale, jnp.float32)
+        if jnp.ndim(s):
+            s = s.reshape(s.shape + (1, 1))
+        return (q.astype(jnp.float32) - jnp.float32(1.0)) * s
+
+    def runtime_packed(self, leaf: BitDeltaLeaf) -> PackedDelta:
+        lead = leaf.stack_shape()
+        hg = _runtime_hg(leaf.h_in)
+        G = leaf.h_in // hg
+        q = 2 * self._sign_codes(leaf)            # {0, 2}: (q - 1)*s = +/-s
+        q = q.reshape(*lead, G, hg, leaf.h_out)
+        codes = quant.pack_bits(q, 2, axis=q.ndim - 2)
+        return _dense_as_structured(
+            q, codes,
+            scale=jnp.asarray(leaf.scale, jnp.float32),
+            zero=_lead_scalar(lead, 1, jnp.int32),
+            h_in=leaf.h_in, h_out=leaf.h_out, k_bits=2, codec=self.name)
+
+    def storage_bits(self, leaf: BitDeltaLeaf) -> dict:
+        stack = int(np.prod(leaf.stack_shape())) if leaf.stack_shape() else 1
+        vb = 1.0 * leaf.h_in * leaf.h_out * stack
+        return {"value_bits": vb, "total_bits": vb + 32.0 * stack}
+
+    def to_storage_parts(self, leaf: BitDeltaLeaf):
+        assert not leaf.stack_shape(), "storage layer operates per-matrix"
+        parts = {"sign": np.asarray(leaf.sign)}
+        meta = {"codec": self.name, "h_in": leaf.h_in, "h_out": leaf.h_out,
+                "scale": float(np.asarray(leaf.scale))}
+        return parts, meta
+
+    def from_storage_parts(self, parts, meta: dict) -> BitDeltaLeaf:
+        return BitDeltaLeaf(sign=jnp.asarray(parts["sign"], jnp.uint8),
+                            scale=jnp.float32(meta["scale"]),
+                            h_in=meta["h_in"], h_out=meta["h_out"])
+
+    def leaf_spec(self, leaf_sds, spec: BitDeltaSpec) -> BitDeltaLeaf:
+        shape = leaf_sds.shape
+        lead, (h_in, h_out) = shape[:-2], shape[-2:]
+        return BitDeltaLeaf(
+            sign=jax.ShapeDtypeStruct(
+                (*lead, quant.packed_len(h_in, 1), h_out), jnp.uint8),
+            scale=jax.ShapeDtypeStruct(lead, jnp.float32),
+            h_in=h_in, h_out=h_out)
+
+    def leaf_axes(self, leaf_sds, ax, spec: BitDeltaSpec,
+                  model_axis_size: int) -> BitDeltaLeaf:
+        d = self.leaf_spec(leaf_sds, spec)
+        lead_ax = tuple(ax[:-2])
+        out_ax = ax[-1]
+        return BitDeltaLeaf(sign=(*lead_ax, None, out_ax), scale=lead_ax,
+                            h_in=d.h_in, h_out=d.h_out)
+
+
+# ---------------------------------------------------------------------------
+# Low-rank residual: quantized dense core + rank-r f32 factors
+# ---------------------------------------------------------------------------
+class LowRankCodec(DeltaCodec):
+    name = "lowrank"
+    spec_cls = LowRankSpec
+    leaf_cls = LowRankLeaf
+
+    def compress_leaf(self, rng, base_leaf, ft_leaf,
+                      spec: LowRankSpec) -> LowRankLeaf:
+        delta = ft_leaf.astype(jnp.float32) - base_leaf.astype(jnp.float32)
+        h_in, h_out = delta.shape[-2:]
+        lead = delta.shape[:-2]
+        q, qp = quant.quantize(delta, spec.k_bits, lead_dims=len(lead))
+        core = self._dequant_core(q, qp.scale, qp.zero, len(lead))
+        # residual factors via numpy SVD: compression is offline, the SVD
+        # never traces (matching the storage layer's numpy-only rule)
+        resid = np.asarray(delta - core)
+        flat = resid.reshape((-1,) + resid.shape[-2:])
+        r = spec.rank
+        us = np.zeros((flat.shape[0], h_in, r), np.float32)
+        vs = np.zeros((flat.shape[0], r, h_out), np.float32)
+        for i, mat in enumerate(flat):
+            U, S, Vt = np.linalg.svd(mat, full_matrices=False)
+            k = min(r, S.shape[0])
+            us[i, :, :k] = U[:, :k] * S[:k]       # u absorbs singular values
+            vs[i, :k, :] = Vt[:k]
+        codes = quant.pack_bits(q, quant.pack_width(spec.k_bits),
+                                axis=q.ndim - 2)
+        return LowRankLeaf(
+            codes=codes, scale=qp.scale, zero=qp.zero,
+            u=jnp.asarray(us.reshape(*lead, h_in, r)),
+            v=jnp.asarray(vs.reshape(*lead, r, h_out)),
+            h_in=h_in, h_out=h_out, k_bits=spec.k_bits, rank=r)
+
+    @staticmethod
+    def _dequant_core(q, scale, zero, lead_dims: int) -> jnp.ndarray:
+        s = jnp.asarray(scale, jnp.float32).reshape(
+            jnp.shape(scale) + (1, 1)) if lead_dims \
+            else jnp.asarray(scale, jnp.float32)
+        z = jnp.asarray(zero, jnp.float32).reshape(
+            jnp.shape(zero) + (1, 1)) if lead_dims \
+            else jnp.asarray(zero, jnp.float32)
+        return (q.astype(jnp.float32) - z) * s
+
+    def reconstruct_dense(self, leaf: LowRankLeaf) -> jnp.ndarray:
+        q = quant.unpack_bits(leaf.codes, quant.pack_width(leaf.k_bits),
+                              leaf.h_in, axis=leaf.codes.ndim - 2)
+        core = self._dequant_core(q, leaf.scale, leaf.zero,
+                                  len(leaf.stack_shape()))
+        return core + leaf.u @ leaf.v
+
+    def runtime_packed(self, leaf: LowRankLeaf) -> PackedDelta:
+        # dense-as-structured f32 values (k_bits=None: decode is the
+        # identity), computed ONCE at conversion time by the exact same
+        # reconstruction the reference path uses — bit-faithful
+        lead = leaf.stack_shape()
+        hg = _runtime_hg(leaf.h_in)
+        G = leaf.h_in // hg
+        vals = self.reconstruct_dense(leaf).reshape(*lead, G, hg, leaf.h_out)
+        return _dense_as_structured(
+            vals, vals,
+            scale=_lead_scalar(lead, 1.0, jnp.float32),
+            zero=_lead_scalar(lead, 0, jnp.int32),
+            h_in=leaf.h_in, h_out=leaf.h_out, k_bits=None, codec=self.name)
+
+    def storage_bits(self, leaf: LowRankLeaf) -> dict:
+        stack = int(np.prod(leaf.stack_shape())) if leaf.stack_shape() else 1
+        vb = (leaf.k_bits * leaf.h_in * leaf.h_out
+              + 32.0 * leaf.rank * (leaf.h_in + leaf.h_out)) * stack
+        return {"value_bits": vb, "total_bits": vb + 64.0 * stack}
+
+    def to_storage_parts(self, leaf: LowRankLeaf):
+        assert not leaf.stack_shape(), "storage layer operates per-matrix"
+        parts = {"codes": np.asarray(leaf.codes),
+                 "u": np.asarray(leaf.u), "v": np.asarray(leaf.v)}
+        meta = {"codec": self.name, "h_in": leaf.h_in, "h_out": leaf.h_out,
+                "k_bits": leaf.k_bits, "rank": leaf.rank,
+                "scale": float(np.asarray(leaf.scale)),
+                "zero": int(np.asarray(leaf.zero))}
+        return parts, meta
+
+    def from_storage_parts(self, parts, meta: dict) -> LowRankLeaf:
+        return LowRankLeaf(
+            codes=jnp.asarray(parts["codes"], jnp.uint8),
+            scale=jnp.float32(meta["scale"]), zero=jnp.int32(meta["zero"]),
+            u=jnp.asarray(parts["u"], jnp.float32),
+            v=jnp.asarray(parts["v"], jnp.float32),
+            h_in=meta["h_in"], h_out=meta["h_out"],
+            k_bits=meta["k_bits"], rank=meta["rank"])
+
+    def leaf_spec(self, leaf_sds, spec: LowRankSpec) -> LowRankLeaf:
+        shape = leaf_sds.shape
+        lead, (h_in, h_out) = shape[:-2], shape[-2:]
+        return LowRankLeaf(
+            codes=jax.ShapeDtypeStruct(
+                (*lead, quant.packed_len(h_in, spec.k_bits), h_out),
+                jnp.uint8),
+            scale=jax.ShapeDtypeStruct(lead, jnp.float32),
+            zero=jax.ShapeDtypeStruct(lead, jnp.int32),
+            u=jax.ShapeDtypeStruct((*lead, h_in, spec.rank), jnp.float32),
+            v=jax.ShapeDtypeStruct((*lead, spec.rank, h_out), jnp.float32),
+            h_in=h_in, h_out=h_out, k_bits=spec.k_bits, rank=spec.rank)
+
+    def leaf_axes(self, leaf_sds, ax, spec: LowRankSpec,
+                  model_axis_size: int) -> LowRankLeaf:
+        d = self.leaf_spec(leaf_sds, spec)
+        lead_ax = tuple(ax[:-2])
+        in_ax, out_ax = ax[-2], ax[-1]
+        return LowRankLeaf(
+            codes=(*lead_ax, None, out_ax), scale=lead_ax, zero=lead_ax,
+            u=(*lead_ax, in_ax, None), v=(*lead_ax, None, out_ax),
+            h_in=d.h_in, h_out=d.h_out, k_bits=d.k_bits, rank=d.rank)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+_CODECS: dict[str, DeltaCodec] = {}
+DEFAULT_CODEC = "deltadq"
+
+
+def register_codec(codec: DeltaCodec) -> DeltaCodec:
+    """Register a codec instance under ``codec.name`` (idempotent for the
+    same instance; raises on a name collision with a different one)."""
+    prev = _CODECS.get(codec.name)
+    if prev is not None and prev is not codec:
+        raise ValueError(f"codec {codec.name!r} is already registered")
+    _CODECS[codec.name] = codec
+    return codec
+
+
+def get_codec(name: str) -> DeltaCodec:
+    try:
+        return _CODECS[name]
+    except KeyError:
+        raise KeyError(f"unknown codec {name!r}; registered: "
+                       f"{sorted(_CODECS)}") from None
+
+
+def codec_names() -> list[str]:
+    """Registered codec names in registration order."""
+    return list(_CODECS)
+
+
+def codec_for_spec(spec) -> DeltaCodec:
+    """The codec owning a spec instance (by spec class)."""
+    for c in _CODECS.values():
+        if isinstance(spec, c.spec_cls):
+            return c
+    raise TypeError(f"no registered codec accepts spec {type(spec).__name__}")
+
+
+def codec_of_leaf(leaf) -> DeltaCodec:
+    """The codec owning a compressed leaf (PackedDelta carries its codec
+    tag; other leaf types resolve by class)."""
+    if isinstance(leaf, PackedDelta):
+        return get_codec(leaf.codec)
+    for c in _CODECS.values():
+        if type(leaf) is c.leaf_cls:
+            return c
+    raise TypeError(f"no registered codec owns leaf {type(leaf).__name__}")
+
+
+def is_codec_leaf(x) -> bool:
+    return isinstance(x, tuple(c.leaf_cls for c in _CODECS.values()))
+
+
+def reconstruct_dense_any(leaf) -> jnp.ndarray:
+    """Dense f32 delta for any registered codec's leaf (incl. runtime
+    PackedDelta forms)."""
+    if isinstance(leaf, PackedDelta):
+        return pack_lib.reconstruct_dense(leaf)
+    return codec_of_leaf(leaf).reconstruct_dense(leaf)
+
+
+def runtime_packed_leaf(leaf) -> PackedDelta:
+    """Lower one codec leaf to the PackedDelta runtime layout (identity
+    on PackedDelta)."""
+    if isinstance(leaf, PackedDelta):
+        return leaf
+    return codec_of_leaf(leaf).runtime_packed(leaf)
+
+
+def runtime_delta_tree(tree: Any) -> Any:
+    """Lower every codec leaf of a deltas tree to its runtime PackedDelta
+    form (idempotent). The serving engines call this at tenant
+    registration, so model/kernel code only ever sees PackedDelta."""
+    return jax.tree.map(runtime_packed_leaf, tree, is_leaf=is_codec_leaf)
+
+
+register_codec(DeltaDQCodec())
+register_codec(BitDeltaCodec())
+register_codec(LowRankCodec())

@@ -1,7 +1,19 @@
-"""End-to-end DeltaDQ compression pipeline over a whole params tree.
+"""End-to-end delta compression over a whole params tree, any codec.
 
     spec = DeltaDQSpec(alpha=8, k_bits=4, m=8)         # 128x
     deltas, report = compress(base_params, ft_params, spec, rng)
+
+    # pick a codec by name (default spec), or per leaf under a budget:
+    deltas, report = compress(base, ft, codec="bitdelta")
+    deltas, report = compress(base, ft, codec="auto", budget_bits=1.5)
+
+The codec family lives in :mod:`repro.core.codecs`; ``compress`` routes
+each leaf through the codec owning the given spec (``DeltaDQSpec`` stays
+importable from here for compatibility). ``codec="auto"`` compresses each
+leaf with every registered codec's candidate spec and keeps the one that
+meets ``budget_bits`` (total stored bits per weight element, indices
+included) at the lowest relative reconstruction error — recorded per leaf
+in the report.
 
 Selection rule: 2-D (or expert-stacked 3-D) projection matrices are
 compressed; embeddings, unembeddings, norms, biases, convs, routers and
@@ -11,7 +23,6 @@ report so nothing is silently dropped.
 """
 from __future__ import annotations
 
-import math
 import zlib
 from dataclasses import dataclass, field
 from typing import Any, Optional
@@ -20,9 +31,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import quant
-from repro.core.dropout import groupwise_dropout_pack, keep_count
-from repro.core.pack import PackedDelta
+# DeltaDQSpec/_pick_hg moved to codecs.py with the codec extraction; both
+# stay importable from here (tests and launchers use this path)
+from repro.core.codecs import (  # noqa: F401  (re-exports)
+    BitDeltaSpec, DeltaCodec, DeltaDQSpec, LowRankSpec, _pick_hg,
+    codec_for_spec, codec_names, get_codec,
+)
 from repro.utils import map_with_paths
 
 _EXCLUDE_TOKENS = (
@@ -42,27 +56,21 @@ def is_compressible(path: str, leaf) -> bool:
     return h_in >= 16 and h_out >= 8
 
 
-@dataclass(frozen=True)
-class DeltaDQSpec:
-    alpha: float = 8.0            # dropout compression (keep-rate 1/alpha)
-    k_bits: Optional[int] = None  # None -> dropout only (paper's 2x..8x rows)
-    m: int = 1                    # separate-quantization parts
-    h_g: Optional[int] = None     # None -> use h_in (row-wise); search sets it
-    seed: int = 0
-
-    def ratio(self) -> float:
-        return quant.compression_ratio(self.alpha, self.k_bits, self.m)
-
-
 @dataclass
 class CompressionReport:
-    spec: DeltaDQSpec
+    spec: Any = None                   # None for codec="auto"
     n_compressed: int = 0
     n_dense: int = 0
     dense_delta_bits: float = 0.0      # bits of the raw bf16 delta we compressed
     packed_value_bits: float = 0.0     # paper convention (values only)
-    packed_total_bits: float = 0.0     # honest: + indices
+    packed_total_bits: float = 0.0     # honest: + indices/factors/metadata
     skipped_paths: list = field(default_factory=list)
+    # per-codec breakdown: name -> {n_leaves, dense_bits, value_bits, total_bits}
+    per_codec: dict = field(default_factory=dict)
+    leaf_codecs: dict = field(default_factory=dict)   # path -> codec name
+    # auto-picker records: path -> {codec, bits_per_element, rel_error, budget_met}
+    auto_choices: dict = field(default_factory=dict)
+    budget_bits: Optional[float] = None
 
     @property
     def ratio_paper(self) -> float:
@@ -72,53 +80,102 @@ class CompressionReport:
     def ratio_honest(self) -> float:
         return self.dense_delta_bits / max(self.packed_total_bits, 1e-9)
 
+    @property
+    def budget_met(self) -> bool:
+        """True iff every auto-picked leaf met the requested budget."""
+        return all(c["budget_met"] for c in self.auto_choices.values())
+
+    def add_leaf(self, path: str, codec: DeltaCodec, leaf) -> None:
+        """Account one compressed leaf via its codec's storage_bits."""
+        bits = codec.storage_bits(leaf)
+        stack = int(np.prod(leaf.stack_shape())) if leaf.stack_shape() else 1
+        dense = 16.0 * leaf.h_in * leaf.h_out * stack
+        self.n_compressed += 1
+        self.dense_delta_bits += dense
+        self.packed_value_bits += bits["value_bits"]
+        self.packed_total_bits += bits["total_bits"]
+        pc = self.per_codec.setdefault(
+            codec.name, {"n_leaves": 0, "dense_bits": 0.0,
+                         "value_bits": 0.0, "total_bits": 0.0})
+        pc["n_leaves"] += 1
+        pc["dense_bits"] += dense
+        pc["value_bits"] += bits["value_bits"]
+        pc["total_bits"] += bits["total_bits"]
+        self.leaf_codecs[path] = codec.name
+
     def summary(self) -> str:
-        return (f"DeltaDQ(alpha={self.spec.alpha}, h_g={self.spec.h_g}, "
-                f"k={self.spec.k_bits}, m={self.spec.m}): "
-                f"{self.n_compressed} tensors packed, {self.n_dense} left dense; "
-                f"ratio paper-convention={self.ratio_paper:.1f}x "
-                f"honest(+indices)={self.ratio_honest:.1f}x "
-                f"(spec target {self.spec.ratio():.0f}x)")
+        if isinstance(self.spec, DeltaDQSpec):
+            head = (f"DeltaDQ(alpha={self.spec.alpha}, h_g={self.spec.h_g}, "
+                    f"k={self.spec.k_bits}, m={self.spec.m})")
+        elif self.spec is not None:
+            head = repr(self.spec)      # dataclass repr: Name(field=...)
+        else:
+            head = (f"auto(budget={self.budget_bits} bits/elt, "
+                    f"met={self.budget_met})")
+        s = (f"{head}: "
+             f"{self.n_compressed} tensors packed, {self.n_dense} left dense; "
+             f"ratio paper-convention={self.ratio_paper:.1f}x "
+             f"honest(+indices)={self.ratio_honest:.1f}x")
+        if self.spec is not None and hasattr(self.spec, "ratio"):
+            s += f" (spec target {self.spec.ratio():.0f}x)"
+        if len(self.per_codec) > 1 or self.spec is None:
+            for name, pc in self.per_codec.items():
+                r = pc["dense_bits"] / max(pc["total_bits"], 1e-9)
+                s += (f"\n  {name}: {pc['n_leaves']} leaves, "
+                      f"honest {r:.1f}x")
+        return s
 
 
-def _pick_hg(h_in: int, spec: DeltaDQSpec) -> int:
-    if spec.h_g is None:
-        return h_in
-    # clamp to a divisor of h_in: largest halving of h_g dividing h_in.
-    # Candidates below alpha are unsatisfiable (keep would round to 0 and
-    # halving only shrinks hg further), so detect that up front instead
-    # of walking to hg < 1 and raising a misleading divisibility error.
-    floor = max(spec.alpha, 1.0)
-    hg = min(spec.h_g, h_in)
-    if hg < floor:
-        raise ValueError(
-            f"unsatisfiable group size: requested h_g={spec.h_g} "
-            f"(clamped to {hg} for h_in={h_in}) is below alpha={spec.alpha}; "
-            f"every group must keep h_g/alpha >= 1 elements, so pick "
-            f"h_g >= alpha")
-    while h_in % hg:
-        hg //= 2
-        if hg < floor:
+def compress_leaf(rng, base_leaf, ft_leaf, spec) -> Any:
+    """Compress one (possibly expert-stacked) weight's delta with the
+    codec owning ``spec`` (DeltaDQSpec -> PackedDelta, other specs ->
+    their codec's leaf type)."""
+    return codec_for_spec(spec).compress_leaf(rng, base_leaf, ft_leaf, spec)
+
+
+def _leaf_rng(rng, path: str):
+    # stable digest, NOT hash(): str hashes are randomized by
+    # PYTHONHASHSEED, which made the "same" compression produce
+    # different deltas across processes — breaking checkpoint
+    # reproducibility and any cross-host identity contract
+    return jax.random.fold_in(
+        rng, zlib.crc32(path.encode("utf-8")) & 0x7FFFFFFF)
+
+
+def _resolve(spec, codec: Optional[str]) -> tuple[Any, DeltaCodec]:
+    if codec is not None:
+        c = get_codec(codec)
+        if spec is None:
+            spec = c.default_spec()
+        elif not isinstance(spec, c.spec_cls):
             raise ValueError(
-                f"unsatisfiable group size: no halving of h_g={spec.h_g} "
-                f"both divides h_in={h_in} and stays >= alpha={spec.alpha}")
-    return int(hg)
+                f"spec {type(spec).__name__} does not belong to codec "
+                f"{codec!r} (expects {c.spec_cls.__name__})")
+        return spec, c
+    if spec is None:
+        spec = DeltaDQSpec()
+    return spec, codec_for_spec(spec)
 
 
-def compress_leaf(rng, base_leaf, ft_leaf, spec: DeltaDQSpec) -> PackedDelta:
-    """Compress one (possibly expert-stacked) weight's delta."""
-    delta = ft_leaf.astype(jnp.float32) - base_leaf.astype(jnp.float32)
-    h_in = delta.shape[-2]
-    hg = _pick_hg(h_in, spec)
-    return groupwise_dropout_pack(rng, delta, h_g=hg, alpha=spec.alpha,
-                                  k_bits=spec.k_bits, m=spec.m)
+def compress(base_params: Any, ft_params: Any, spec: Any = None,
+             rng: Optional[jax.Array] = None, *,
+             codec: Optional[str] = None,
+             budget_bits: Optional[float] = None) -> tuple[Any, CompressionReport]:
+    """Compress every eligible delta leaf; returns (deltas tree, report).
 
-
-def compress(base_params: Any, ft_params: Any, spec: DeltaDQSpec,
-             rng: Optional[jax.Array] = None) -> tuple[Any, CompressionReport]:
-    """Compress every eligible delta leaf; returns (deltas tree, report)."""
+    ``spec`` picks the codec by its class (default: ``DeltaDQSpec()``,
+    dropout-only — the registry default codec). ``codec`` selects by name
+    with the codec's default spec; ``codec="auto"`` runs the per-leaf
+    auto-picker and requires ``budget_bits`` (stored bits per weight
+    element, indices included).
+    """
+    if codec == "auto":
+        return _compress_auto(base_params, ft_params, spec, rng, budget_bits)
+    if budget_bits is not None:
+        raise ValueError("budget_bits only applies to codec='auto'")
+    spec, c = _resolve(spec, codec)
     if rng is None:
-        rng = jax.random.PRNGKey(spec.seed)
+        rng = jax.random.PRNGKey(getattr(spec, "seed", 0))
     report = CompressionReport(spec=spec)
 
     def fn(path: str, b, f):
@@ -126,18 +183,69 @@ def compress(base_params: Any, ft_params: Any, spec: DeltaDQSpec,
             report.n_dense += 1
             report.skipped_paths.append(path)
             return None
-        # stable digest, NOT hash(): str hashes are randomized by
-        # PYTHONHASHSEED, which made the "same" compression produce
-        # different deltas across processes — breaking checkpoint
-        # reproducibility and any cross-host identity contract
-        leaf_rng = jax.random.fold_in(
-            rng, zlib.crc32(path.encode("utf-8")) & 0x7FFFFFFF)
-        d = compress_leaf(leaf_rng, b, f, spec)
-        report.n_compressed += 1
-        stack = int(np.prod(d.stack_shape())) if d.stack_shape() else 1
-        report.dense_delta_bits += 16.0 * d.h_in * d.h_out * stack
-        report.packed_value_bits += d.value_bits() * stack
-        report.packed_total_bits += (d.value_bits() + d.index_bits()) * stack
+        d = c.compress_leaf(_leaf_rng(rng, path), b, f, spec)
+        report.add_leaf(path, c, d)
+        return d
+
+    deltas = map_with_paths(fn, base_params, ft_params)
+    return deltas, report
+
+
+def auto_candidates(spec: Any = None) -> list[tuple[DeltaCodec, Any]]:
+    """The (codec, spec) candidates the auto-picker evaluates: every
+    registered codec at its default spec, except that an explicit ``spec``
+    replaces its own codec's default."""
+    out = []
+    for name in codec_names():
+        c = get_codec(name)
+        sp = spec if (spec is not None and isinstance(spec, c.spec_cls)) \
+            else c.default_spec()
+        out.append((c, sp))
+    return out
+
+
+def _compress_auto(base_params, ft_params, spec, rng,
+                   budget_bits) -> tuple[Any, CompressionReport]:
+    """Per-leaf codec auto-pick: cheapest codec meeting the size budget
+    at the lowest measured reconstruction error.
+
+    Rule per leaf: among candidates whose honest bits/element (indices
+    included) fit ``budget_bits``, keep the lowest relative Frobenius
+    reconstruction error (ties -> fewer bits). If none fit, keep the
+    smallest candidate and mark the leaf ``budget_met=False``.
+    """
+    if budget_bits is None:
+        raise ValueError("codec='auto' requires budget_bits")
+    if rng is None:
+        rng = jax.random.PRNGKey(getattr(spec, "seed", 0) if spec else 0)
+    candidates = auto_candidates(spec)
+    report = CompressionReport(spec=None, budget_bits=budget_bits)
+
+    def fn(path: str, b, f):
+        if not is_compressible(path, b):
+            report.n_dense += 1
+            report.skipped_paths.append(path)
+            return None
+        leaf_rng = _leaf_rng(rng, path)
+        delta = np.asarray(f, np.float32) - np.asarray(b, np.float32)
+        dnorm = float(np.linalg.norm(delta))
+        n_elems = delta.size
+        scored = []
+        for c, sp in candidates:
+            d = c.compress_leaf(leaf_rng, b, f, sp)
+            bpe = c.storage_bits(d)["total_bits"] / n_elems
+            recon = np.asarray(c.reconstruct_dense(d), np.float32)
+            err = float(np.linalg.norm(recon - delta)) / max(dnorm, 1e-12)
+            scored.append((c, d, bpe, err))
+        feasible = [s for s in scored if s[2] <= budget_bits]
+        if feasible:
+            c, d, bpe, err = min(feasible, key=lambda s: (s[3], s[2]))
+        else:
+            c, d, bpe, err = min(scored, key=lambda s: (s[2], s[3]))
+        report.add_leaf(path, c, d)
+        report.auto_choices[path] = {
+            "codec": c.name, "bits_per_element": bpe, "rel_error": err,
+            "budget_met": bool(bpe <= budget_bits)}
         return d
 
     deltas = map_with_paths(fn, base_params, ft_params)
@@ -153,70 +261,41 @@ def decompress(base_params: Any, deltas: Any) -> Any:
 # ---------------------------------------------------------------------------
 # Shape-only twins for the multi-pod dry-run (no compression computed)
 # ---------------------------------------------------------------------------
-def delta_leaf_spec(leaf_spec, spec: DeltaDQSpec) -> PackedDelta:
-    """PackedDelta of ShapeDtypeStructs for one weight's compressed delta."""
-    from repro.core.quant import packed_len
-
-    shape = leaf_spec.shape
-    lead, (h_in, h_out) = shape[:-2], shape[-2:]
-    hg = _pick_hg(h_in, spec)
-    # the same helper real packing uses (dropout._check): shape-only
-    # dry-run specs can never drift from what packing actually produces
-    keep = keep_count(hg, spec.alpha)
-    G = h_in // hg
-    idx_dtype = jnp.uint8 if hg <= 256 else jnp.int32
-    if spec.k_bits is None:
-        codes = jax.ShapeDtypeStruct((*lead, G, keep, h_out), jnp.float32)
-        scale = jax.ShapeDtypeStruct(lead, jnp.float32)
-        zero = jax.ShapeDtypeStruct(lead, jnp.int32)
-    else:
-        kp = packed_len(keep, spec.k_bits)
-        codes = jax.ShapeDtypeStruct((*lead, G, kp, h_out), jnp.uint8)
-        scale = jax.ShapeDtypeStruct(lead, jnp.float32)
-        zero = jax.ShapeDtypeStruct(lead, jnp.int32)
-    return PackedDelta(
-        idx=jax.ShapeDtypeStruct((*lead, G, keep, h_out), idx_dtype),
-        codes=codes, scale=scale, zero=zero,
-        h_in=h_in, h_out=h_out, h_g=hg, keep=keep,
-        alpha=spec.alpha, k_bits=spec.k_bits, m=spec.m,
-    )
+def delta_leaf_spec(leaf_spec, spec) -> Any:
+    """Codec leaf of ShapeDtypeStructs for one weight's compressed delta."""
+    return codec_for_spec(spec).leaf_spec(leaf_spec, spec)
 
 
-def delta_specs(param_specs: Any, spec: DeltaDQSpec) -> Any:
-    """ShapeDtypeStruct deltas tree mirroring a param-specs tree."""
+def delta_specs(param_specs: Any, spec: Any) -> Any:
+    """ShapeDtypeStruct deltas tree mirroring a param-specs tree (any
+    registered codec's spec)."""
+    c = codec_for_spec(spec)
 
     def fn(path, leaf):
         if not is_compressible(path, leaf):
             return None
-        return delta_leaf_spec(leaf, spec)
+        return c.leaf_spec(leaf, spec)
 
     return map_with_paths(fn, param_specs)
 
 
-def delta_axes(param_specs: Any, param_axes: Any, spec: DeltaDQSpec,
+def delta_axes(param_specs: Any, param_axes: Any, spec: Any,
                model_axis_size: int) -> Any:
     """Logical-axes tree matching :func:`delta_specs` structure.
 
-    idx/codes [lead..., G, K, O]: O inherits the base weight's output axis;
-    the G (group) axis inherits the input axis only when group boundaries
-    align with the shard boundaries (G divisible by the mesh axis) — else
-    it is replicated, which is cheap because deltas are tiny (the paper's
-    point). scale/zero inherit the lead axes.
+    For DeltaDQ, idx/codes [lead..., G, K, O]: O inherits the base
+    weight's output axis; the G (group) axis inherits the input axis only
+    when group boundaries align with the shard boundaries (G divisible by
+    the mesh axis) — else it is replicated, which is cheap because deltas
+    are tiny (the paper's point). scale/zero inherit the lead axes. Other
+    codecs define the analogous mapping in their ``leaf_axes``.
     """
+    c = codec_for_spec(spec)
 
     def fn(path, leaf, ax):
         if not is_compressible(path, leaf):
             return None
-        d = delta_leaf_spec(leaf, spec)
-        lead_ax = tuple(ax[:-2])
-        in_ax, out_ax = ax[-2], ax[-1]
-        g_ax = in_ax if d.n_groups % max(model_axis_size, 1) == 0 else None
-        arr_ax = (*lead_ax, g_ax, None, out_ax)
-        return PackedDelta(
-            idx=arr_ax, codes=arr_ax, scale=lead_ax, zero=lead_ax,
-            h_in=d.h_in, h_out=d.h_out, h_g=d.h_g, keep=d.keep,
-            alpha=d.alpha, k_bits=d.k_bits, m=d.m,
-        )
+        return c.leaf_axes(leaf, ax, spec, model_axis_size)
 
     return map_with_paths(fn, param_specs, param_axes,
                           is_leaf=lambda x: hasattr(x, "shape"))

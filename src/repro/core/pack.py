@@ -40,7 +40,12 @@ class PackedDelta:
       codes: bit-packed k-bit codes, uint8,       [..., G, Kp, O]   (Kp = packed_len(K,k))
              or float values                      [..., G, K, O]    when k_bits is None
       scale, zero: per-tensor quant params (scalars; stacked if leading dims)
-    Static meta: h_in, h_out, h_g, keep, alpha, k_bits, m.
+    Static meta: h_in, h_out, h_g, keep, alpha, k_bits, m, codec.
+
+    ``codec`` names the :mod:`repro.core.codecs` entry that produced this
+    runtime form ("deltadq" natively; other codecs lower to PackedDelta at
+    tenant registration). It rides in the pytree aux so mixed-codec trees
+    never stack silently and attribution can report the decode source.
     """
     idx: jnp.ndarray
     codes: jnp.ndarray
@@ -53,11 +58,13 @@ class PackedDelta:
     alpha: float
     k_bits: int | None
     m: int
+    codec: str = "deltadq"
 
     # -- pytree plumbing ---------------------------------------------------
     def tree_flatten(self):
         children = (self.idx, self.codes, self.scale, self.zero)
-        aux = (self.h_in, self.h_out, self.h_g, self.keep, self.alpha, self.k_bits, self.m)
+        aux = (self.h_in, self.h_out, self.h_g, self.keep, self.alpha,
+               self.k_bits, self.m, self.codec)
         return children, aux
 
     @classmethod
@@ -82,7 +89,7 @@ class PackedDelta:
                            self.scale[i] if jnp.ndim(self.scale) else self.scale,
                            self.zero[i] if jnp.ndim(self.zero) else self.zero,
                            self.h_in, self.h_out, self.h_g, self.keep,
-                           self.alpha, self.k_bits, self.m)
+                           self.alpha, self.k_bits, self.m, self.codec)
 
     # -- storage accounting (bits; paper conventions in quant.py) ----------
     def value_bits(self) -> float:

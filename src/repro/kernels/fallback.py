@@ -84,10 +84,10 @@ def correction(x2: jnp.ndarray, d: PackedDelta, *,
                gather_max_t: int = 64) -> jnp.ndarray:
     """Formulation chooser: gather for decode-sized T, dense otherwise."""
     if x2.shape[0] <= gather_max_t:
-        _note("correction", formulation="xla-gather",
+        _note("correction", formulation="xla-gather", codec=d.codec,
               T=int(x2.shape[0]), gather_max_t=int(gather_max_t))
         return gather_correction(x2, d)
-    _note("correction", formulation="xla-dense",
+    _note("correction", formulation="xla-dense", codec=d.codec,
           T=int(x2.shape[0]), gather_max_t=int(gather_max_t))
     return dense_correction(x2, d)
 
@@ -199,7 +199,7 @@ def segment_correction(x2: jnp.ndarray, d: PackedDelta,
     removes the unpack from the step altogether.
     """
     T = x2.shape[0]
-    _note("segment_correction", formulation="segments-xla",
+    _note("segment_correction", formulation="segments-xla", codec=d.codec,
           residency="values" if values is not None else "packed", T=int(T))
     # map each (sorted) row to its segment: count of segment ends <= row
     rows_iota = jnp.arange(T, dtype=jnp.int32)
@@ -209,7 +209,7 @@ def segment_correction(x2: jnp.ndarray, d: PackedDelta,
         d.idx[tenant_rows], d.codes[tenant_rows],
         jnp.asarray(d.scale, jnp.float32)[tenant_rows],
         jnp.asarray(d.zero, jnp.int32)[tenant_rows],
-        d.h_in, d.h_out, d.h_g, d.keep, d.alpha, d.k_bits, d.m)
+        d.h_in, d.h_out, d.h_g, d.keep, d.alpha, d.k_bits, d.m, d.codec)
     vals = None
     if values is not None:
         vals = values[res_map[tenant_rows]]          # [T, G, K, O] f32

@@ -111,7 +111,7 @@ def _pad_cols(d: PackedDelta, ob: int) -> PackedDelta:
     widths = [(0, 0)] * (d.idx.ndim - 1) + [(0, pad)]
     return PackedDelta(jnp.pad(d.idx, widths), jnp.pad(d.codes, widths),
                        d.scale, d.zero, d.h_in, d.h_out + pad, d.h_g,
-                       d.keep, d.alpha, d.k_bits, d.m)
+                       d.keep, d.alpha, d.k_bits, d.m, d.codec)
 
 
 def delta_spmm(x: jnp.ndarray, d: PackedDelta, *, tb: Optional[int] = None,
@@ -129,7 +129,7 @@ def delta_spmm(x: jnp.ndarray, d: PackedDelta, *, tb: Optional[int] = None,
     tb_eff = min(t["tb"], max(_pow2_floor(x2.shape[0]), 8))
     x2, T = _pad_rows(x2, tb_eff)
     ob_eff = _col_tile(d.h_out, t["ob"])
-    _note("delta_spmm", formulation="pallas",
+    _note("delta_spmm", formulation="pallas", codec=d.codec,
           tb=tb_eff, ob=ob_eff, kc=t["kc"])
     dp = _pad_cols(d, ob_eff)
     s, z = _scalars(d)
@@ -160,9 +160,11 @@ def delta_spmm_slots(x: jnp.ndarray, d: PackedDelta, *,
     assert d.stack_shape() == (B,), (d.stack_shape(), x.shape)
     probe = d.index(0)
     if interpret or not kernel_supported(probe):
-        _note("delta_spmm_slots", formulation="per-row-gather", B=int(B))
+        _note("delta_spmm_slots", formulation="per-row-gather",
+              codec=d.codec, B=int(B))
         return fallback.gather_correction_rows(x, d)
-    _note("delta_spmm_slots", formulation="per-row-pallas", B=int(B))
+    _note("delta_spmm_slots", formulation="per-row-pallas",
+          codec=d.codec, B=int(B))
     fn = lambda xb, db: delta_spmm(xb, db, tb=tb, ob=ob, kc=kc,
                                    interpret=False)
     return jax.vmap(fn)(x, d)
@@ -214,7 +216,8 @@ def delta_spmm_segments(x_sorted: jnp.ndarray, d: PackedDelta,
     x2, T = _pad_rows(x_sorted, tb_eff)
     ob_eff = _col_tile(d.h_out, t["ob"])
     _note("delta_spmm_segments", formulation="segments-pallas",
-          residency="packed", tb=tb_eff, ob=ob_eff, kc=t["kc"])
+          codec=d.codec, residency="packed", tb=tb_eff, ob=ob_eff,
+          kc=t["kc"])
     dp = _pad_cols(d, ob_eff)
     scale = jnp.asarray(d.scale, jnp.float32).reshape(-1, 1)
     zero = jnp.asarray(d.zero, jnp.int32).reshape(-1, 1)
@@ -283,7 +286,7 @@ def delta_correction_sharded(x: jnp.ndarray, d: PackedDelta, mesh, *,
     def local_delta(idx, codes, s, z) -> PackedDelta:
         # local O-slice delta: static meta rebuilt with the shard's h_out
         return PackedDelta(idx, codes, s, z, d.h_in, idx.shape[-1], d.h_g,
-                           d.keep, d.alpha, d.k_bits, d.m)
+                           d.keep, d.alpha, d.k_bits, d.m, d.codec)
 
     # tiles and formulation decided on the GLOBAL envelope point (the
     # local slice has a different h_out key: it must not flip the
@@ -293,7 +296,8 @@ def delta_correction_sharded(x: jnp.ndarray, d: PackedDelta, mesh, *,
     t_glob = _tiles(d, tb, ob, None)
     tb, ob = t_glob["tb"], t_glob["ob"]
     kc = t_glob["kc"]
-    _note("delta_correction_sharded", sharded=True, model_shards=int(n),
+    _note("delta_correction_sharded", sharded=True, codec=d.codec,
+          model_shards=int(n),
           per_shard_segments=segments is not None
           and jnp.ndim(segments[0]) == 2)
 

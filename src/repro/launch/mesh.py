@@ -151,7 +151,7 @@ def delta_shardings(deltas: Any, mesh, *, shard_output: bool = False) -> Any:
         else:
             arr = repl
         return PackedDelta(arr, arr, repl, repl, d.h_in, d.h_out, d.h_g,
-                           d.keep, d.alpha, d.k_bits, d.m)
+                           d.keep, d.alpha, d.k_bits, d.m, d.codec)
 
     return jax.tree.map(one, deltas,
                         is_leaf=lambda x: isinstance(x, PackedDelta))

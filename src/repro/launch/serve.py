@@ -23,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
-from repro.core import DeltaDQSpec, compress
+from repro.core import BitDeltaSpec, DeltaDQSpec, compress
 from repro.models import lm
 from repro.serve import ContinuousEngine
 from repro.utils import tree_bytes
@@ -37,16 +37,44 @@ RATIO_SPECS = {
 }
 
 
-def synth_tenants(cfg, base, n, spec, rng):
-    """Synthesize n fine-tuned variants and compress their deltas."""
+def synth_tenants(cfg, base, n, spec, rng, *, budget_bits=None):
+    """Synthesize n fine-tuned variants and compress their deltas.
+
+    ``spec`` may be a single codec spec (all tenants identical), a list
+    of n per-tenant specs (mixed-codec fleets), or a codec-name string
+    (``"deltadq"``/``"bitdelta"``/``"lowrank"``/``"auto"``; ``"auto"``
+    takes ``budget_bits``).
+    """
+    specs = spec if isinstance(spec, list) else [spec] * n
+    assert len(specs) == n, (len(specs), n)
     out = []
     for t in range(n):
         ft = jax.tree.map(
             lambda p, t=t: p + 0.02 * jax.random.normal(
                 jax.random.fold_in(rng, 7 + t), p.shape, jnp.float32).astype(p.dtype)
             if p.ndim >= 2 else p, base)
-        out.append((f"tenant{t}", *compress(base, ft, spec)))
+        kw = {}
+        if isinstance(specs[t], str):
+            kw = {"codec": specs[t]}
+            if specs[t] == "auto":
+                kw["budget_bits"] = budget_bits
+            out.append((f"tenant{t}", *compress(base, ft, **kw)))
+        else:
+            out.append((f"tenant{t}", *compress(base, ft, specs[t])))
     return out
+
+
+def _tenant_specs(args) -> list:
+    """Per-tenant spec list for --codec; 'mixed' alternates codecs."""
+    if args.codec == "deltadq":
+        return [RATIO_SPECS[args.ratio]] * args.tenants
+    if args.codec == "mixed":
+        # alternate codecs across the fleet: even rows keep the DeltaDQ
+        # ratio spec, odd rows ship BitDelta — two codec groups served
+        # by one engine
+        return [RATIO_SPECS[args.ratio] if t % 2 == 0 else BitDeltaSpec()
+                for t in range(args.tenants)]
+    return [args.codec] * args.tenants        # codec-name strings
 
 
 def main():
@@ -55,6 +83,17 @@ def main():
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--tenants", type=int, default=2)
     ap.add_argument("--ratio", type=int, default=128, choices=sorted(RATIO_SPECS))
+    ap.add_argument("--codec", default="deltadq",
+                    choices=("deltadq", "bitdelta", "lowrank", "auto",
+                             "mixed"),
+                    help="delta codec for every tenant: 'deltadq' keeps "
+                         "the --ratio spec table; 'bitdelta'/'lowrank' use "
+                         "those codecs' defaults; 'auto' per-leaf picks the "
+                         "cheapest codec meeting --budget-bits; 'mixed' "
+                         "alternates DeltaDQ/BitDelta across tenants (one "
+                         "engine, two codec groups)")
+    ap.add_argument("--budget-bits", type=float, default=None,
+                    help="per-element bit budget for --codec auto")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
@@ -129,8 +168,15 @@ def main():
                          "pools mirror the mesh data axis)")
     rng = jax.random.PRNGKey(0)
     base = lm.init_params(cfg, rng)
-    tenants = synth_tenants(cfg, base, args.tenants, RATIO_SPECS[args.ratio],
-                            rng)
+    tenants = synth_tenants(cfg, base, args.tenants, _tenant_specs(args),
+                            rng, budget_bits=args.budget_bits)
+
+    stream = []
+    for i in range(args.requests):
+        L = 4 + (i % 3) * 4         # mixed prompt lengths -> multiple buckets
+        prompt = np.asarray(jax.random.randint(
+            jax.random.fold_in(rng, 100 + i), (L,), 0, cfg.vocab))
+        stream.append((f"tenant{i % args.tenants}", prompt))
 
     def serve_stream(mesh_, default_path=False):
         # the identity reference serves the DEFAULT path (occupancy
@@ -161,11 +207,7 @@ def main():
         for name, deltas, report in tenants:
             eng_.register_tenant(name, deltas, report)
         reqs_ = []
-        for i in range(args.requests):
-            tenant = f"tenant{i % args.tenants}"
-            L = 4 + (i % 3) * 4     # mixed prompt lengths -> multiple buckets
-            prompt = np.asarray(jax.random.randint(
-                jax.random.fold_in(rng, 100 + i), (L,), 0, cfg.vocab))
+        for i, (tenant, prompt) in enumerate(stream):
             reqs_.append(eng_.submit(tenant, prompt,
                                      max_new_tokens=args.max_new,
                                      arrival=i * args.arrival_gap))
@@ -176,15 +218,17 @@ def main():
     ref_reqs = None
     if args.check_identity:
         nondefault = args.admission != "occupancy" or args.residency_mb > 0
-        if mesh is None and not nondefault:
+        if mesh is None and not nondefault and args.codec != "mixed":
             raise SystemExit("--check-identity requires --devices N > 1, "
-                             "--admission affinity or --residency-mb > 0 "
-                             "(nothing to compare against otherwise)")
+                             "--admission affinity, --residency-mb > 0 or "
+                             "--codec mixed (nothing to compare against "
+                             "otherwise)")
         # single-device reference FIRST (its jits trace without the mesh).
         # With --data N this is also the data=1 reference, and it always
         # runs the default path (occupancy admission, packed deltas) —
         # so --admission/--residency-mb are covered by the same check.
-        _, ref_reqs, _ = serve_stream(None, default_path=True)
+        if mesh is not None or nondefault:
+            _, ref_reqs, _ = serve_stream(None, default_path=True)
 
     for name, _, report in tenants:
         print(f"registered {name}: {report.summary()}", flush=True)
@@ -198,6 +242,32 @@ def main():
             raise SystemExit(f"token identity FAILED for requests {bad}")
         print(f"token identity vs single device: OK "
               f"({len(reqs)} requests)", flush=True)
+
+    if args.check_identity and args.codec == "mixed":
+        # mixed-codec contract: each request's tokens must match an
+        # engine serving ONLY that tenant (same mesh, same prompts) —
+        # the other codec group's row-0 zero delta contributes exactly
+        # 0.0 to the summed correction, so serving together is
+        # token-identical to serving alone
+        bad = []
+        for name, deltas, report in tenants:
+            eng_a = ContinuousEngine(cfg, base, n_slots=args.slots,
+                                     max_seq=args.max_seq, mesh=mesh)
+            eng_a.register_tenant(name, deltas, report)
+            mine = [(i, r) for i, r in enumerate(reqs) if r.tenant == name]
+            alone = [eng_a.submit(name, stream[i][1],
+                                  max_new_tokens=args.max_new,
+                                  arrival=k * args.arrival_gap)
+                     for k, (i, _) in enumerate(mine)]
+            eng_a.run()
+            bad += [r.rid for (_, r), s in zip(mine, alone)
+                    if not np.array_equal(r.output(), s.output())]
+        if bad:
+            raise SystemExit(
+                f"mixed-codec identity FAILED for requests {bad}")
+        print(f"token identity vs per-tenant-alone engines: OK "
+              f"({len(reqs)} requests, "
+              f"{len(eng._groups)} codec groups)", flush=True)
 
     if args.print_tokens:
         # per-request token dump for inspection. Do NOT diff these across

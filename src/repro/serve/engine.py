@@ -35,12 +35,14 @@ import numpy as np
 from repro.configs.arch import ArchConfig
 from repro.core.apply import (
     _is_pd,
+    combine_slot_deltas,
     dget,
     get_use_pallas,
     stack_tenant_deltas,
     wrap_slot_deltas,
     zero_delta_like,
 )
+from repro.core.codecs import runtime_delta_tree
 from repro.core.compress import CompressionReport
 from repro.core.pack import PackedDelta, decode_values
 from repro.models import lm
@@ -80,6 +82,12 @@ class Tenant:
 
     def bytes(self) -> int:
         return tree_bytes(self.deltas)
+
+    def codecs(self) -> tuple:
+        """Codec names appearing in this tenant's (runtime) delta tree."""
+        names = {l.codec for l in jax.tree.leaves(self.deltas, is_leaf=_is_pd)
+                 if _is_pd(l)}
+        return tuple(sorted(names))
 
 
 class DeltaStore:
@@ -263,6 +271,36 @@ class DeltaResidency:
 
 
 # ---------------------------------------------------------------------------
+# Codec groups: tenants whose runtime packings can share one stack
+# ---------------------------------------------------------------------------
+def _stack_signature(deltas: Any) -> tuple:
+    """Per-leaf packing meta of a runtime delta tree. Two tenants can
+    join one tenant stack iff their signatures are equal (same meta the
+    ``stack_tenant_deltas`` leaf check enforces, including the codec)."""
+    return tuple(
+        (l.h_in, l.h_out, l.h_g, l.keep, l.k_bits, l.m, l.codec,
+         tuple(l.idx.shape), tuple(l.codes.shape))
+        for l in jax.tree.leaves(deltas, is_leaf=_is_pd) if _is_pd(l))
+
+
+@dataclasses.dataclass
+class _CodecGroup:
+    """One stack-compatible tenant group of a mixed-codec engine.
+
+    ``stacked`` is the group's tenant-stacked runtime tree with the zero
+    delta at its row 0; ``lut`` maps a GLOBAL tenant row (the engine's
+    ``_rows`` / scheduler numbering) to this group's local stack row —
+    rows the group does not own map to 0, the zero delta, so applying
+    every group to every batch row and summing is exact (see
+    ``core.apply.MultiSlotDelta``).
+    """
+    stacked: Any
+    lut: np.ndarray                   # int32 [n_global_rows]
+    names: List[str]
+    codecs: tuple
+
+
+# ---------------------------------------------------------------------------
 # Continuous-batching engine
 # ---------------------------------------------------------------------------
 class ContinuousEngine:
@@ -414,7 +452,8 @@ class ContinuousEngine:
         self._pos = np.zeros(n_slots, np.int32)
         self._row = np.zeros(n_slots, np.int32)
 
-        self._stacked = None          # tenant-stacked deltas tree
+        self._stacked = None          # tenant-stacked deltas tree (1 group)
+        self._groups: List[_CodecGroup] = []   # stack-compatible groups
         self._zero_tree = None        # unstacked all-zero tree (base prefill)
         self._rows: dict[str, int] = {}
         self._store_version = -1
@@ -443,10 +482,14 @@ class ContinuousEngine:
     def register_tenant(self, name: str, deltas: Any, report=None) -> Tenant:
         """Register a tenant, validating slot-dispatch compatibility NOW.
 
-        A tenant whose packing spec cannot join the stack must fail here,
-        not mid-run inside a prefill (which would leak the claimed slot).
+        ``deltas`` may be any codec's compressed tree (BitDelta leaves,
+        low-rank residual leaves, native PackedDelta); it is lowered to
+        the PackedDelta runtime layout here, once, so every downstream
+        consumer (prefill, decode, residency) sees one format. A tenant
+        whose tree structure cannot join the engine must fail here, not
+        mid-run inside a prefill (which would leak the claimed slot).
         """
-        t = self.store.register(name, deltas, report)
+        t = self.store.register(name, runtime_delta_tree(deltas), report)
         try:
             self._refresh_stacked()
         except ValueError:
@@ -462,11 +505,13 @@ class ContinuousEngine:
             return
         tenants = self.store.ordered()
         self.residency = None            # stack rows changed: rebuild below
+        self._groups = []
         if not tenants:
             self._stacked = None
             self._zero_tree = None
             self._rows = {}
         else:
+            ref_struct = jax.tree.structure(tenants[0].deltas, is_leaf=_is_pd)
             for t in tenants:
                 moe = dget(t.deltas, "moe")
                 if moe is not None and any(
@@ -475,32 +520,75 @@ class ContinuousEngine:
                     raise ValueError(
                         "slot dispatch cannot apply deltas at MoE expert "
                         "sites; serve MoE tenants via per-tenant grouping")
+                if jax.tree.structure(t.deltas, is_leaf=_is_pd) != ref_struct:
+                    # codec groups relax the *packing* meta, not the tree
+                    # shape: combining per-group corrections needs every
+                    # group's tree to mirror the same param sites
+                    raise ValueError(
+                        "tenant delta trees differ in structure; "
+                        "cannot stack for slot dispatch")
             self._zero_tree = zero_delta_like(tenants[0].deltas)
-            # row 0 = zero delta so base requests share the decode shape
-            self._stacked = stack_tenant_deltas(
-                [self._zero_tree] + [t.deltas for t in tenants])
             self._rows = {t.name: i + 1 for i, t in enumerate(tenants)}
-            if self.mesh is not None:
-                # compressed deltas are tiny: place them across the mesh
-                # once, at registration, not on every decode step. The
-                # stacked dispatch tree shards its output-column axis
-                # over `model` where it divides (each shard then holds
-                # only its slice of the compressed bytes — the layout
-                # the shard_map'd correction consumes natively);
-                # delta_shardings falls back to replicated per leaf.
-                from repro.launch import mesh as mesh_lib
-                if self.shard_deltas == "auto":
-                    self._stacked = mesh_lib.shard_tree(
-                        self._stacked,
-                        mesh_lib.delta_shardings(self._stacked, self.mesh,
-                                                 shard_output=True))
+            # partition tenants into stack-compatible groups (first-fit in
+            # registration order, so group membership — and therefore each
+            # group's local rows — never reorders under appends). Tenants
+            # with one codec/spec land in a single group: the existing
+            # single-stack behavior, bit for bit.
+            buckets: List[tuple] = []    # (signature, [(global_row, Tenant)])
+            for i, t in enumerate(tenants):
+                sig = _stack_signature(t.deltas)
+                for bsig, members in buckets:
+                    if bsig == sig:
+                        members.append((i + 1, t))
+                        break
                 else:
-                    self._stacked = mesh_lib.replicate(self._stacked,
-                                                       self.mesh)
+                    buckets.append((sig, [(i + 1, t)]))
+            n_global = len(tenants) + 1
+            for _, members in buckets:
+                # row 0 = zero delta so base requests (and rows owned by
+                # OTHER groups) share the decode shape and decode to 0
+                zero_g = zero_delta_like(members[0][1].deltas)
+                stacked_g = stack_tenant_deltas(
+                    [zero_g] + [t.deltas for _, t in members])
+                lut = np.zeros(n_global, np.int32)
+                for local, (grow, _) in enumerate(members, start=1):
+                    lut[grow] = local
+                if self.mesh is not None:
+                    # compressed deltas are tiny: place them across the
+                    # mesh once, at registration, not on every decode
+                    # step. The stacked dispatch tree shards its
+                    # output-column axis over `model` where it divides
+                    # (each shard then holds only its slice of the
+                    # compressed bytes — the layout the shard_map'd
+                    # correction consumes natively); delta_shardings
+                    # falls back to replicated per leaf.
+                    from repro.launch import mesh as mesh_lib
+                    if self.shard_deltas == "auto":
+                        stacked_g = mesh_lib.shard_tree(
+                            stacked_g,
+                            mesh_lib.delta_shardings(stacked_g, self.mesh,
+                                                     shard_output=True))
+                    else:
+                        stacked_g = mesh_lib.replicate(stacked_g, self.mesh)
+                codecs = tuple(sorted(
+                    {c for _, t in members for c in t.codecs()}))
+                self._groups.append(_CodecGroup(
+                    stacked=stacked_g, lut=lut,
+                    names=[t.name for _, t in members], codecs=codecs))
+            # single group == the classic homogeneous engine: keep the
+            # stacked tree on its historical attribute (residency and
+            # introspection read it); mixed-codec engines expose _groups
+            self._stacked = self._groups[0].stacked \
+                if len(self._groups) == 1 else None
+            if self.mesh is not None:
+                from repro.launch import mesh as mesh_lib
                 self._zero_tree = mesh_lib.replicate(self._zero_tree,
                                                      self.mesh)
             if self.residency_budget_bytes \
-                    and self.slot_dispatch == "segments":
+                    and self.slot_dispatch == "segments" \
+                    and len(self._groups) == 1:
+                # the residency tier keys its value buffers to ONE stack's
+                # rows; mixed-codec engines serve packed (still correct)
                 self.residency = DeltaResidency(
                     self._stacked, self.residency_budget_bytes,
                     mesh=self.mesh)
@@ -636,7 +724,14 @@ class ContinuousEngine:
         self._refresh_stacked()
         sd = None
         res_used = None
-        if self._stacked is not None:
+        parts = []
+        for g in self._groups:
+            # group-local rows: slots owned by another group's tenants map
+            # to this group's row 0 (the zero delta) and contribute an
+            # exact 0.0 to the summed correction — which is what keeps
+            # mixed-codec decode token-identical to serving each tenant
+            # alone
+            rows_g = g.lut[self._row]
             seg = None
             values = res_map = None
             if self.slot_dispatch == "segments":
@@ -648,9 +743,9 @@ class ContinuousEngine:
                 # pool's rows + segments, so each shard dequantizes only
                 # the tenants it actually hosts.
                 if self.data > 1:
-                    seg = tenant_segments_sharded(self._row, self.data)
+                    seg = tenant_segments_sharded(rows_g, self.data)
                 else:
-                    seg = tenant_segments(self._row)
+                    seg = tenant_segments(rows_g)
                 seg = jax.tree.map(jnp.asarray, seg)
                 # the residency tier targets the XLA host path (it
                 # removes the per-step code unpack); under the Pallas
@@ -664,15 +759,19 @@ class ContinuousEngine:
                     # Attaching values changes the SlotDelta pytree
                     # structure, so a residency engine compiles at most
                     # TWO decode shapes (values + packed), not per step.
-                    rm = self.residency.ensure(self._row)
+                    # (Residency only exists when len(_groups) == 1, so
+                    # rows_g here is the identity map over self._row.)
+                    rm = self.residency.ensure(rows_g)
                     res_used = rm is not None
                     if res_used:
                         values = self.residency.values
                         res_map = jnp.asarray(rm)
-            sd = wrap_slot_deltas(self._stacked, jnp.asarray(self._row),
-                                  segments=seg, values=values,
-                                  res_map=res_map)
-        sig = ("decode", sd is not None, bool(res_used))
+            parts.append(wrap_slot_deltas(g.stacked, jnp.asarray(rows_g),
+                                          segments=seg, values=values,
+                                          res_map=res_map))
+        if parts:
+            sd = combine_slot_deltas(parts)
+        sig = ("decode", len(self._groups), bool(res_used))
         with attribution() as notes:
             nxt, new_cache = self._decode(
                 self.base, self.kv.cache, jnp.asarray(self._tok[:, None]),
@@ -798,7 +897,9 @@ class Engine:
         self._cont: Optional[ContinuousEngine] = None
 
     def register_tenant(self, name: str, deltas: Any, report=None):
-        return self.store.register(name, deltas, report)
+        # lower any codec's compressed tree to the PackedDelta runtime
+        # layout once here; generate() reads store.get(...).deltas directly
+        return self.store.register(name, runtime_delta_tree(deltas), report)
 
     def generate(self, tenant: Optional[str], prompts: np.ndarray,
                  max_new_tokens: int = 16, stop_token: Optional[int] = None,
@@ -843,14 +944,17 @@ class Engine:
 
         Thin shim over :class:`ContinuousEngine`; falls back to the legacy
         per-tenant static grouping when slot dispatch cannot apply to this
-        arch/delta combination.
+        arch/delta combination. Heterogeneous packing specs and mixed
+        codecs are NOT a fallback case anymore: the continuous engine
+        partitions tenants into stack-compatible codec groups and sums
+        the per-group corrections.
         """
         try:
             eng = self._continuous()
             eng._refresh_stacked()   # raises for non-stackable tenant sets
         except (ValueError, NotImplementedError):
-            # slot dispatch inapplicable (MoE deltas, heterogeneous specs,
-            # encdec/vlm): legacy per-tenant grouping still serves these
+            # slot dispatch inapplicable (MoE deltas, mismatched tree
+            # structure, encdec/vlm): legacy per-tenant grouping serves
             return self._serve_batch_grouped(requests, max_new_tokens)
         for tenant, prompt in requests:
             # capacity errors must NOT fall back: the grouped path would

@@ -115,3 +115,101 @@ def test_pytree_registration():
     p2 = jax.tree.map(lambda x: x, p)
     assert isinstance(p2, PackedDelta)
     assert p2.h_g == p.h_g
+
+
+# ---------------------------------------------------------------------------
+# Codec-parametrized round-trips (the DeltaCodec protocol contract)
+# ---------------------------------------------------------------------------
+from repro.core import decode_values  # noqa: E402
+from repro.core.codecs import (  # noqa: E402
+    BitDeltaSpec,
+    DeltaDQSpec,
+    LowRankSpec,
+    codec_names,
+    get_codec,
+)
+
+# quantized DeltaDQ spec (the default DeltaDQSpec is dropout-only, which
+# the storage layer stores as raw f32 values — fine, but the interesting
+# round-trip is through packed codes)
+CODEC_SPECS = {
+    "deltadq": DeltaDQSpec(alpha=8.0, k_bits=4, m=2, h_g=16),
+    "bitdelta": BitDeltaSpec(),
+    "lowrank": LowRankSpec(rank=4, k_bits=4),
+}
+
+
+def _codec_leaf(name, h_in=64, h_out=24, seed=0):
+    c = get_codec(name)
+    rng = jax.random.PRNGKey(seed)
+    base = jax.random.normal(rng, (h_in, h_out))
+    ft = base + 0.01 * jax.random.normal(
+        jax.random.fold_in(rng, 1), (h_in, h_out))
+    leaf = c.compress_leaf(jax.random.fold_in(rng, 2), base, ft,
+                           CODEC_SPECS[name])
+    return c, leaf
+
+
+def test_every_registered_codec_is_exercised():
+    assert sorted(codec_names()) == sorted(CODEC_SPECS)
+
+
+@pytest.mark.parametrize("name", sorted(CODEC_SPECS))
+def test_codec_runtime_lowering_bit_faithful(name):
+    """The serving contract: every codec's runtime PackedDelta lowering
+    reconstructs the exact same dense delta as the codec's own reference
+    decode — bit equality, not allclose (token identity depends on it)."""
+    c, leaf = _codec_leaf(name)
+    rt = c.runtime_packed(leaf)
+    assert isinstance(rt, PackedDelta) and rt.codec == name
+    np.testing.assert_array_equal(np.asarray(reconstruct_dense(rt)),
+                                  np.asarray(c.reconstruct_dense(leaf)))
+    np.testing.assert_array_equal(np.asarray(c.decode_values(leaf)),
+                                  np.asarray(decode_values(rt)))
+
+
+@pytest.mark.parametrize("name", sorted(CODEC_SPECS))
+def test_codec_storage_parts_roundtrip(name):
+    c, leaf = _codec_leaf(name)
+    parts, meta = c.to_storage_parts(leaf)
+    assert meta["codec"] == name
+    leaf2 = c.from_storage_parts(parts, meta)
+    np.testing.assert_array_equal(np.asarray(c.reconstruct_dense(leaf)),
+                                  np.asarray(c.reconstruct_dense(leaf2)))
+    # full child equality where the layout is unique (the m-part DeltaDQ
+    # CSR interleaves part order; its canonical-order equality is covered
+    # by test_storage_parts_roundtrip_full_equality above)
+    if name == "bitdelta":
+        np.testing.assert_array_equal(np.asarray(leaf.sign),
+                                      np.asarray(leaf2.sign))
+        np.testing.assert_array_equal(np.asarray(leaf.scale, np.float32),
+                                      np.asarray(leaf2.scale, np.float32))
+    if name == "lowrank":
+        for attr in ("codes", "scale", "zero", "u", "v"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(leaf, attr)),
+                np.asarray(getattr(leaf2, attr)))
+
+
+@pytest.mark.parametrize("name", sorted(CODEC_SPECS))
+def test_codec_leaf_spec_matches_compression(name):
+    """Abstract ShapeDtypeStruct twins agree with real compression:
+    same tree structure, shapes and dtypes leaf for leaf."""
+    c, leaf = _codec_leaf(name)
+    sds = jax.ShapeDtypeStruct((64, 24), jnp.float32)
+    twin = c.leaf_spec(sds, CODEC_SPECS[name])
+    real_leaves = jax.tree.leaves(leaf)
+    twin_leaves = jax.tree.leaves(twin)
+    assert len(real_leaves) == len(twin_leaves)
+    for a, b in zip(real_leaves, twin_leaves):
+        assert tuple(a.shape) == tuple(b.shape), (name, a.shape, b.shape)
+        assert a.dtype == b.dtype, (name, a.dtype, b.dtype)
+
+
+@pytest.mark.parametrize("name", sorted(CODEC_SPECS))
+def test_codec_storage_bits_positive_and_below_dense(name):
+    c, leaf = _codec_leaf(name)
+    bits = c.storage_bits(leaf)
+    dense = 16.0 * leaf.h_in * leaf.h_out
+    assert 0 < bits["value_bits"] <= bits["total_bits"]
+    assert bits["value_bits"] < dense

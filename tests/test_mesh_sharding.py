@@ -187,6 +187,63 @@ def test_sharded_engine_token_identity_mixed_stream(subproc):
     assert "OK" in out
 
 
+def test_sharded_mixed_codec_token_identity(subproc):
+    """Mixed-codec fleet (DeltaDQ + BitDelta codec groups) under the
+    (2, 4) mesh: tokens must match BOTH the single-device mixed engine
+    and per-tenant-alone engines — the codec-group zero row contributes
+    exactly 0.0 on every shard."""
+    out = subproc("""
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.configs import get_smoke_config
+    from repro.core import BitDeltaSpec
+    from repro.launch.mesh import make_serving_mesh
+    from repro.launch.serve import RATIO_SPECS, synth_tenants
+    from repro.models import lm
+    from repro.serve import ContinuousEngine
+    from repro.serve.scheduler import VirtualClock
+
+    cfg = get_smoke_config('llama3.2-1b')
+    rng = jax.random.PRNGKey(0)
+    base = lm.init_params(cfg, rng)
+    tenants = synth_tenants(cfg, base, 2,
+                            [RATIO_SPECS[128], BitDeltaSpec()], rng)
+    prompts = [np.asarray(jax.random.randint(
+        jax.random.fold_in(rng, 100 + i), (4 + (i % 2) * 4,), 0, cfg.vocab))
+        for i in range(6)]
+
+    def run(mesh, names):
+        eng = ContinuousEngine(cfg, base, n_slots=4, max_seq=64,
+                               clock=VirtualClock(tick=0.01), mesh=mesh)
+        for name, deltas, rep in tenants:
+            if name in names:
+                eng.register_tenant(name, deltas, rep)
+        reqs = [eng.submit(f'tenant{i % 2}', p, max_new_tokens=6,
+                           arrival=i * 0.05)
+                for i, p in enumerate(prompts)
+                if f'tenant{i % 2}' in names]
+        eng.run()
+        assert all(r.done for r in reqs)
+        return eng, [r.output() for r in reqs]
+
+    both = {'tenant0', 'tenant1'}
+    _, ref = run(None, both)                       # single-device mixed
+    alone = {}
+    for name, _, _ in tenants:                     # per-tenant-alone refs
+        _, outs = run(None, {name})
+        alone[name] = outs
+    eng, got = run(make_serving_mesh(8, data=2), both)
+    assert len(eng._groups) == 2
+    for i, (a, b) in enumerate(zip(ref, got)):
+        assert (a == b).all(), ('mesh-vs-1dev', i, a.tolist(), b.tolist())
+    for name, _, _ in tenants:
+        mine = [o for i, o in enumerate(got) if f'tenant{i % 2}' == name]
+        for i, (a, b) in enumerate(zip(alone[name], mine)):
+            assert (a == b).all(), ('alone', name, i)
+    print('OK')
+    """, n_devices=8)
+    assert "OK" in out
+
+
 @pytest.mark.slow  # two full mesh engine streams in a subprocess
 def test_sharded_delta_placement_token_identity(subproc):
     """Output-column-sharded packed deltas (shard_deltas='auto', the

@@ -411,9 +411,11 @@ def test_continuous_engine_ssm_exact_buckets():
         np.testing.assert_array_equal(r.output(), want)
 
 
-def test_incompatible_tenant_rejected_at_registration(dense_setup):
-    """A tenant whose packing spec can't join the stack fails at
-    register_tenant, not mid-run — and the engine stays fully usable."""
+def test_heterogeneous_specs_register_into_codec_groups(dense_setup):
+    """A tenant whose packing spec differs from the stack no longer fails
+    at registration: it lands in its own codec group and serves
+    token-identically to a per-tenant engine (the mixed-group contract).
+    Tenants whose delta TREE STRUCTURE differs still fail up front."""
     cfg, base, tenants = dense_setup
     eng = ContinuousEngine(cfg, base, n_slots=2, max_seq=32,
                            clock=VirtualClock(tick=1e-3))
@@ -423,16 +425,71 @@ def test_incompatible_tenant_rejected_at_registration(dense_setup):
         lambda p: p + 0.05 * jax.random.normal(
             jax.random.PRNGKey(77), p.shape, jnp.float32).astype(p.dtype)
         if p.ndim >= 2 else p, base)
-    other_spec, _ = compress(base, ft, DeltaDQSpec(alpha=2.0, k_bits=8, h_g=16))
-    with pytest.raises(ValueError):
-        eng.register_tenant("bad", other_spec)
+    other, _ = compress(base, ft, DeltaDQSpec(alpha=2.0, k_bits=8, h_g=16))
+    eng.register_tenant("t-hetero", other)
+    eng._refresh_stacked()
+    assert len(eng._groups) == 2
+    assert {t.name for t in eng.store.ordered()} == {"t0", "t-hetero"}
+
+    # a tenant missing a compressed site (different None pattern) cannot
+    # join any group — combining per-group corrections needs one tree shape
+    flat, treedef = jax.tree.flatten(
+        other, is_leaf=lambda x: x is not None and not isinstance(x, dict))
+    bad = jax.tree.unflatten(
+        treedef, [None if i == 0 else l for i, l in enumerate(flat)])
+    with pytest.raises(ValueError, match="structure"):
+        eng.register_tenant("bad", bad)
     assert "bad" not in {t.name for t in eng.store.ordered()}
 
-    # engine still serves, no slot was leaked
-    r = eng.submit("t0", np.arange(5) % cfg.vocab, max_new_tokens=3)
+    # both groups serve, token-identical to each tenant alone
+    ref = Engine(cfg, base, max_seq=32)
+    ref.register_tenant("t0", tenants[0])
+    ref.register_tenant("t-hetero", other)
+    p0 = np.arange(5) % cfg.vocab
+    p1 = (np.arange(5) + 3) % cfg.vocab
+    r0 = eng.submit("t0", p0, max_new_tokens=3)
+    r1 = eng.submit("t-hetero", p1, max_new_tokens=3)
     eng.run()
-    assert r.done and len(r.tokens) == 3
+    np.testing.assert_array_equal(
+        r0.output(), ref.generate("t0", p0[None], max_new_tokens=3)[0])
+    np.testing.assert_array_equal(
+        r1.output(), ref.generate("t-hetero", p1[None], max_new_tokens=3)[0])
     assert eng.kv.n_free == eng.n_slots
+
+
+def test_mixed_codec_engine_token_identical_to_alone(dense_setup):
+    """Two tenants on two different CODECS (DeltaDQ + BitDelta) served by
+    one engine: every request's tokens must match an engine serving only
+    that tenant — the other codec group's zero row contributes exactly
+    0.0 to the summed correction."""
+    from repro.core import BitDeltaSpec
+    cfg, base, tenants = dense_setup
+    ft = jax.tree.map(
+        lambda p: p + 0.05 * jax.random.normal(
+            jax.random.PRNGKey(88), p.shape, jnp.float32).astype(p.dtype)
+        if p.ndim >= 2 else p, base)
+    bd, _ = compress(base, ft, BitDeltaSpec())
+    fleet = {"t-dq": tenants[0], "t-bd": bd}
+    prompts = {"t-dq": np.arange(6) % cfg.vocab,
+               "t-bd": (np.arange(6) + 2) % cfg.vocab}
+
+    alone = {}
+    for name, d in fleet.items():
+        e1 = ContinuousEngine(cfg, base, n_slots=2, max_seq=32,
+                              clock=VirtualClock(tick=1e-3))
+        e1.register_tenant(name, d)
+        alone[name] = e1.serve([(name, prompts[name])], max_new_tokens=5)[0]
+
+    eng = ContinuousEngine(cfg, base, n_slots=2, max_seq=32,
+                           clock=VirtualClock(tick=1e-3))
+    for name, d in fleet.items():
+        eng.register_tenant(name, d)
+    outs = eng.serve([(n, prompts[n]) for n in fleet], max_new_tokens=5)
+    assert len(eng._groups) == 2
+    assert sorted(c for g in eng._groups for c in g.codecs) \
+        == ["bitdelta", "deltadq"]
+    for (name, _), out in zip(fleet.items(), outs):
+        np.testing.assert_array_equal(out, alone[name])
 
 
 def test_clamped_bucket_pad_overwrite_token_identical(dense_setup):
