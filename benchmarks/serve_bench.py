@@ -273,6 +273,137 @@ def affinity_unique_check(n_tenants: int = 16, n_requests: int = 32,
     return out
 
 
+def continuous_zipf(n_tenants: int = 8, n_requests: int = 48,
+                    n_slots: int = 4, max_new: int = 8,
+                    arrival_gap: float = 0.004, devices: int = 1,
+                    data: int = 1, chunk_size: int = 16) -> dict:
+    """Sustained zipf-arrival load: chunked vs unchunked prefill twins.
+
+    The TTFT-cliff workload: arrivals outnumber slots many times over
+    at a gap far below per-request service time, so the queue stays
+    deep for the whole run and every wasted dispatch (a batch-1
+    whole-prompt prefill advances zero decode tokens) compounds into
+    queue wait. Tenant picks are zipf-ish (hot-tenant skew like real
+    multi-tenant traffic); prompt lengths span the whole bucket ladder
+    (8..max_seq), because that is where the cliff lives: the
+    whole-prompt engine compiles one prefill program per length bucket,
+    and warmup covers only ONE typical bucket — as in production, where
+    the shape ladder is too wide to pre-warm — so the first request to
+    hit each remaining bucket stalls the entire engine behind a mid-run
+    compile while the queue is deep. The chunked engine serves every
+    length through its two fixed shapes (combined decode+chunk, masked
+    decode), so after the same one-bucket warmup it never compiles
+    again. Both twins serve the SAME trace with the SAME warmup; the
+    chunked engine must deliver strictly better ``ttft_p95`` at
+    equal-or-better throughput (the --check gate).
+    """
+    cfg = get_smoke_config("llama3.2-1b")
+    rng = jax.random.PRNGKey(0)
+    base = lm.init_params(cfg, rng)
+    tenants = synth_tenants(cfg, base, n_tenants, SERVE_SPEC, rng)
+    mesh = None
+    if devices > 1:
+        from repro.launch.mesh import make_serving_mesh
+        mesh = make_serving_mesh(devices, data=data)
+
+    rs = np.random.RandomState(11)
+    trace = []
+    # one length per bucket rung (buckets 8/16/32/64 at max_seq=64),
+    # cycled so every rung recurs throughout the run
+    lengths = (6, 12, 20, 28, 40, 48)
+    for i in range(n_requests):
+        t = rs.randint(4) if rs.rand() < 0.6 else rs.randint(n_tenants)
+        L = lengths[i % len(lengths)]
+        prompt = rs.randint(0, cfg.vocab, size=L).astype(np.int32)
+        trace.append((f"tenant{t}", prompt, i * arrival_gap))
+
+    def run(chunked: bool) -> dict:
+        eng = ContinuousEngine(
+            cfg, base, n_slots=n_slots, max_seq=64, mesh=mesh, data=data,
+            chunked_prefill=chunked, chunk_size=chunk_size)
+        for name, deltas, _ in tenants:
+            eng.register_tenant(name, deltas)
+        # warm ONE typical bucket (both twins, identically) — the rest
+        # of the shape ladder is deliberately left cold; mid-run bucket
+        # compiles ARE the cliff this row measures
+        warm = eng.submit("tenant0", np.zeros(12, np.int32),
+                          max_new_tokens=2)
+        eng.run()
+        assert warm.done
+        eng.reset_metrics()
+        reqs = [eng.submit(t, p, max_new_tokens=max_new, arrival=a)
+                for t, p, a in trace]
+        rep = eng.run().report()
+        assert all(r.done for r in reqs)
+        return {
+            "tokens_per_sec": rep["tokens_per_sec"],
+            "ttft_p50_ms": 1e3 * rep["ttft_p50"],
+            "ttft_p95_ms": 1e3 * rep["ttft_p95"],
+            "itl_p50_ms": None if rep["itl_p50"] is None
+            else 1e3 * rep["itl_p50"],
+            "itl_p95_ms": None if rep["itl_p95"] is None
+            else 1e3 * rep["itl_p95"],
+            "batch_occupancy": rep["batch_occupancy"],
+            "decode_steps": rep["decode_steps"],
+        }
+
+    unchunked = run(False)
+    chunked = run(True)
+    tps_ratio = chunked["tokens_per_sec"] / unchunked["tokens_per_sec"]
+    out = {
+        "n_tenants": n_tenants, "n_requests": n_requests,
+        "n_slots": n_slots, "devices": devices, "data": data,
+        "chunk_size": chunk_size, "arrival_gap_s": arrival_gap,
+        "unchunked": unchunked, "chunked": chunked,
+        "tps_chunked_vs_unchunked_x": tps_ratio,
+        # the gate: strictly better tail TTFT at equal-or-better
+        # throughput (5% wall-clock headroom on "equal")
+        "chunked_better_ttft": chunked["ttft_p95_ms"]
+        < unchunked["ttft_p95_ms"],
+        "throughput_held": tps_ratio >= 1 / 1.05,
+    }
+    print(f"continuous_zipf: ttft p95 {unchunked['ttft_p95_ms']:.0f}ms -> "
+          f"{chunked['ttft_p95_ms']:.0f}ms chunked, throughput "
+          f"{unchunked['tokens_per_sec']:.0f} -> "
+          f"{chunked['tokens_per_sec']:.0f} tok/s ({tps_ratio:.2f}x)")
+    return out
+
+
+def residency_memory_trade(n_tenants: int = 24, n_requests: int = 24,
+                           n_slots: int = 8, residency_mb: float = 64.0
+                           ) -> dict:
+    """Residency's memory trade at a >16-tenant config (deferred half of
+    the PR 5 residency row): what the value cache actually commits in
+    bytes, against the packed deltas it fronts, at a fleet size where
+    capacity pressure and LRU churn are real."""
+    row = continuous_bench(n_tenants, n_requests=n_requests,
+                           n_slots=n_slots, residency_mb=residency_mb)
+    res = row.get("residency") or {}
+    packed_total = row["delta_bytes_per_tenant"] * n_tenants
+    out = {
+        "n_tenants": n_tenants,
+        "n_requests": n_requests,
+        "residency_mb": residency_mb,
+        "tokens_per_sec": row["tokens_per_sec"],
+        "packed_delta_bytes_total": packed_total,
+        "value_cache_allocated_bytes": res.get("allocated_bytes"),
+        "value_cache_row_bytes": res.get("row_bytes"),
+        "capacity_rows": res.get("capacity_rows"),
+        "resident_rows": res.get("resident_rows"),
+        "hit_rate": res.get("hit_rate"),
+        "fallback_steps": res.get("fallback_steps"),
+        # the trade: decoded-f32 bytes committed per packed delta byte
+        "allocated_vs_packed_x": None if not res.get("allocated_bytes")
+        else res["allocated_bytes"] / packed_total,
+    }
+    alloc = out["value_cache_allocated_bytes"] or 0
+    print(f"residency_memory_24t: {alloc / 1e6:.2f}MB value cache vs "
+          f"{packed_total / 1e6:.2f}MB packed deltas "
+          f"({out['allocated_vs_packed_x'] or 0:.1f}x), hit rate "
+          f"{out['hit_rate'] if out['hit_rate'] is not None else 'n/a'}")
+    return out
+
+
 def compare_against(fresh: dict, baseline_path: str, tolerance: float) -> list:
     """Regressions of the fresh run vs a committed baseline (throughput
     may not drop below baseline/tolerance; decode latency may not grow
@@ -313,6 +444,23 @@ def compare_against(fresh: dict, baseline_path: str, tolerance: float) -> list:
             f"tracing overhead {tro['tracing_overhead_x']:.3f}x > 1.05x "
             f"(traced {tro['traced_tokens_per_sec']:.0f} vs untraced "
             f"{tro['untraced_tokens_per_sec']:.0f} tok/s)")
+    # chunked-prefill zipf gate: same-process twin over the SAME trace,
+    # so no baseline row or tolerance — chunked must deliver strictly
+    # better tail TTFT without giving up throughput (5% headroom on
+    # "equal"); anything else means interleaving stopped paying its way
+    zp = fresh.get("continuous_zipf")
+    if zp:
+        if not zp.get("chunked_better_ttft"):
+            fails.append(
+                f"chunked prefill ttft_p95 "
+                f"{zp['chunked']['ttft_p95_ms']:.0f}ms not strictly "
+                f"better than unchunked "
+                f"{zp['unchunked']['ttft_p95_ms']:.0f}ms on the zipf row")
+        if not zp.get("throughput_held"):
+            fails.append(
+                f"chunked prefill throughput "
+                f"{zp['tps_chunked_vs_unchunked_x']:.2f}x of its "
+                f"unchunked twin (< 1/1.05) on the zipf row")
     base_us = baseline.get("micro", {}).get("decode_with_delta_us")
     fresh_us = fresh.get("micro", {}).get("decode_with_delta_us")
     if base_us and fresh_us and fresh_us > base_us * tolerance:
@@ -432,6 +580,17 @@ def main():
             # two shard pools with occupancy-balanced admission
             report["continuous_data2"] = continuous_bench(
                 2, n_requests=8, devices=args.devices, data=2)
+
+    # chunked-prefill zipf row: same-trace twin (chunked vs whole-prompt)
+    # under sustained hot-tenant load across the full bucket ladder; its
+    # gate is within-process (twin ratio), so it runs in quick mode too
+    report["continuous_zipf"] = continuous_zipf(
+        n_requests=24 if args.quick else 48,
+        devices=args.devices if args.devices > 1 else 1)
+    if not args.quick:
+        # residency memory trade at fleet scale (>16 tenants): bytes the
+        # value cache commits against the packed deltas it fronts
+        report["residency_memory_24t"] = residency_memory_trade()
 
     base_bytes = report["continuous"][0]["base_bytes"]
     delta_bytes = report["continuous"][0]["delta_bytes_per_tenant"]

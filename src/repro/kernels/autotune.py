@@ -15,12 +15,29 @@ because the gather/dense crossover scales with the contraction width,
 not just the packing spec. ``kernels.ops`` consults :func:`lookup`
 whenever a caller does not pin the tiles explicitly. A missing table
 (or a missing envelope point) falls back to :data:`DEFAULTS`, so the
-table is an optimization, never a correctness dependency. Table format
-(JSON)::
+table is an optimization, never a correctness dependency.
 
-    {"version": 2, "backend": "cpu",
+Since v3 the key additionally carries the **token count T** as an
+overlay: chunked prefill drives the correction at chunk-sized T (e.g.
+16 or the combined decode+chunk row count), and BENCH_kernels.json
+shows the gather/dense crossover — and the best kernel tiles — moving
+with T, so a prefill-sized call must not inherit decode tiles.
+``lookup(..., t=T)`` merges ``DEFAULTS <- base entry <- "@T" entry``
+where the T entry's key suffix is the :data:`T_GRID` bucket T snaps to
+(:func:`snap_t`). Base entries keep the swept ``gather_max_t``
+crossover (the formulation decision stays ONE monotone threshold — the
+identity contract's guarantee that a row computes the same bits at any
+batch size); T entries overlay per-T tiles (TPU) and record the
+measured per-T formulation + timings (CPU), which is what kernel_bench
+reports. v2 tables (no ``@T`` entries) still load: the overlay is
+simply empty. Table format (JSON)::
+
+    {"version": 3, "backend": "cpu",
      "entries": {"64/8/4/128/256": {"tb": 128, "ob": 128, "kc": 8,
-                                    "gather_max_t": 64}}}
+                                    "gather_max_t": 64},
+                 "64/8/4/128/256@T16": {"formulation": "gather",
+                                        "gather_us": 8.1,
+                                        "dense_us": 55.0}}}
 
 ``gather_max_t`` is floored at :data:`MIN_GATHER_T`: the segment
 dispatch always uses the gather formulation, so the per-tenant
@@ -68,9 +85,19 @@ def table_path() -> str:
     return os.environ.get("REPRO_AUTOTUNE_TABLE", DEFAULT_TABLE_PATH)
 
 
+def snap_t(t: int) -> int:
+    """Snap a token count to its :data:`T_GRID` bucket (smallest grid
+    point >= t; counts past the grid share the largest bucket)."""
+    for g in T_GRID:
+        if t <= g:
+            return g
+    return T_GRID[-1]
+
+
 def envelope_key(h_g: int, keep: int, k_bits: Optional[int], h_in: int,
-                 h_out: int) -> str:
-    return f"{h_g}/{keep}/{k_bits}/{h_in}/{h_out}"
+                 h_out: int, t: Optional[int] = None) -> str:
+    base = f"{h_g}/{keep}/{k_bits}/{h_in}/{h_out}"
+    return base if t is None else f"{base}@T{snap_t(t)}"
 
 
 def load_table(path: Optional[str] = None) -> dict:
@@ -95,12 +122,26 @@ def invalidate_cache() -> None:
 
 
 def lookup(h_g: int, keep: int, k_bits: Optional[int], h_in: int,
-           h_out: int) -> dict:
+           h_out: int, t: Optional[int] = None) -> dict:
     """Tile/formulation parameters for an envelope point (always complete:
-    missing keys are filled from :data:`DEFAULTS`)."""
+    missing keys are filled from :data:`DEFAULTS`).
+
+    ``t`` (the call's token count — static at trace time) overlays the
+    per-T entry on top of the base entry: per-T tiles win where swept,
+    everything else (notably ``gather_max_t``) comes from the base
+    entry, so the formulation threshold stays one monotone crossover.
+    """
     entries = load_table()
-    got = entries.get(envelope_key(h_g, keep, k_bits, h_in, h_out), {})
-    return {**DEFAULTS, **got}
+    key = envelope_key(h_g, keep, k_bits, h_in, h_out)
+    got = {**DEFAULTS, **entries.get(key, {})}
+    if t is not None:
+        overlay = entries.get(envelope_key(h_g, keep, k_bits, h_in, h_out,
+                                           t=t), {})
+        got.update({k: v for k, v in overlay.items()
+                    if k in ("tb", "ob", "kc")})
+    # the identity floor survives any table contents (see module doc)
+    got["gather_max_t"] = max(int(got["gather_max_t"]), MIN_GATHER_T)
+    return got
 
 
 # ---------------------------------------------------------------------------
@@ -118,27 +159,40 @@ def _time(fn, *args, n: int = 30) -> float:
     return (time.perf_counter() - t0) / n * 1e6
 
 
-def _sweep_gather_max_t(p, rng) -> int:
-    """Largest T on the grid where the gather formulation still wins
-    (floored at MIN_GATHER_T; see module docstring)."""
+def _sweep_gather_max_t(p, rng) -> tuple:
+    """Measure gather vs dense across :data:`T_GRID`.
+
+    Returns ``(gather_max_t, overlays)``: the largest T where gather
+    still wins (floored at MIN_GATHER_T, kept monotone — the first
+    crossover freezes the threshold), plus the per-T ``@T`` overlay
+    entries recording both timings and the formulation the runtime
+    actually selects at that T under the threshold."""
     import jax
     from repro.kernels import fallback
     best = 0
+    crossed = False
+    timings = {}
     for T in T_GRID:
         x = jax.random.normal(rng, (T, p.h_in))
         us_gather = _time(lambda x: fallback.gather_correction(x, p), x)
         us_dense = _time(lambda x: fallback.dense_correction(x, p), x)
-        if us_gather > us_dense:
-            break   # crossover found: keep the stored threshold monotone
-        best = T
-    return max(best, MIN_GATHER_T)
+        timings[T] = (us_gather, us_dense)
+        if not crossed and us_gather > us_dense:
+            crossed = True
+        if not crossed:
+            best = T
+    gmax = max(best, MIN_GATHER_T)
+    overlays = {T: {"gather_us": round(ug, 2), "dense_us": round(ud, 2),
+                    "formulation": "gather" if T <= gmax else "dense"}
+                for T, (ug, ud) in timings.items()}
+    return gmax, overlays
 
 
-def _sweep_kernel_tiles(p, rng) -> dict:
+def _sweep_kernel_tiles(p, rng, T: int = 128) -> dict:
     """Best (tb, ob, kc) for the compiled Pallas kernel (TPU only)."""
     import jax
     from repro.kernels import ops
-    x = jax.random.normal(rng, (128, p.h_in))
+    x = jax.random.normal(rng, (T, p.h_in))
     # only the kernel-tile keys: returning gather_max_t here would
     # clobber the crossover the caller just measured
     best = {k: DEFAULTS[k] for k in ("tb", "ob", "kc")}
@@ -158,8 +212,16 @@ def _sweep_kernel_tiles(p, rng) -> dict:
 
 
 def sweep_point(h_g: int, keep: int, k_bits: Optional[int], h_in: int,
-                h_out: int, *, seed: int = 0) -> dict:
-    """Measure one envelope point; returns its table entry."""
+                h_out: int, *, seed: int = 0) -> tuple:
+    """Measure one envelope point.
+
+    Returns ``(base_entry, overlays)``: the base table entry plus the
+    ``{T: entry}`` per-token-count overlay map (v3) — the overlay
+    measurements come for free from the crossover sweep, which already
+    walks :data:`T_GRID` (so chunk-sized T is always covered). On TPU
+    each overlay additionally carries the (tb, ob, kc) swept at that T,
+    so prefill-chunk-sized calls stop inheriting decode tiles.
+    """
     import jax
     from repro.core import groupwise_dropout_pack
     alpha = max(1, h_g // max(keep, 1))
@@ -167,10 +229,12 @@ def sweep_point(h_g: int, keep: int, k_bits: Optional[int], h_in: int,
     delta = jax.random.normal(rng, (h_in, h_out)) * 0.01
     p = groupwise_dropout_pack(rng, delta, h_g=h_g, alpha=alpha, k_bits=k_bits)
     entry = dict(DEFAULTS)
-    entry["gather_max_t"] = _sweep_gather_max_t(p, rng)
+    entry["gather_max_t"], overlays = _sweep_gather_max_t(p, rng)
     if jax.default_backend() == "tpu":
         entry.update(_sweep_kernel_tiles(p, rng))
-    return entry
+        for T in T_GRID:
+            overlays[T].update(_sweep_kernel_tiles(p, rng, T))
+    return entry, overlays
 
 
 # the envelope points the serving configs actually hit: the smoke config
@@ -214,12 +278,14 @@ def main() -> None:
     entries = {}
     for (h_g, keep, k_bits, h_in, h_out) in points:
         key = envelope_key(h_g, keep, k_bits, h_in, h_out)
-        entries[key] = sweep_point(h_g, keep, k_bits, h_in, h_out)
+        entries[key], overlays = sweep_point(h_g, keep, k_bits, h_in, h_out)
         print(f"{key}: {entries[key]}")
+        for T, ov in overlays.items():
+            entries[envelope_key(h_g, keep, k_bits, h_in, h_out, t=T)] = ov
 
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:
-        json.dump({"version": 2, "backend": jax.default_backend(),
+        json.dump({"version": 3, "backend": jax.default_backend(),
                    "entries": entries}, f, indent=2, sort_keys=True)
         f.write("\n")
     print(f"# wrote {args.out}")

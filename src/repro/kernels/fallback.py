@@ -107,8 +107,9 @@ def correction_nd(x: jnp.ndarray, d: PackedDelta, *,
     """
     if gather_max_t is None:
         from repro.kernels import autotune
-        gather_max_t = autotune.lookup(d.h_g, d.keep, d.k_bits, d.h_in,
-                                       d.h_out)["gather_max_t"]
+        gather_max_t = autotune.lookup(
+            d.h_g, d.keep, d.k_bits, d.h_in, d.h_out,
+            t=x.size // x.shape[-1])["gather_max_t"]
     lead = x.shape[:-1]
     x2 = x.reshape(-1, d.h_in)
     y = correction(x2, d, gather_max_t=gather_max_t)

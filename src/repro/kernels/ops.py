@@ -67,9 +67,14 @@ def _pad_rows(x: jnp.ndarray, mult: int):
     return x, T
 
 
-def _tiles(d: PackedDelta, tb, ob, kc) -> dict:
-    """Resolve tile sizes: explicit args win, else the autotune table."""
-    tuned = autotune.lookup(d.h_g, d.keep, d.k_bits, d.h_in, d.h_out)
+def _tiles(d: PackedDelta, tb, ob, kc, t: Optional[int] = None) -> dict:
+    """Resolve tile sizes: explicit args win, else the autotune table.
+
+    ``t`` is the call's token count (a static trace-time int): the v3
+    table overlays per-T tiles on the envelope point so prefill-chunk
+    sized calls stop inheriting decode tiles. ``gather_max_t`` always
+    comes from the base entry (one monotone formulation threshold)."""
+    tuned = autotune.lookup(d.h_g, d.keep, d.k_bits, d.h_in, d.h_out, t=t)
     return {"tb": tb if tb is not None else tuned["tb"],
             "ob": ob if ob is not None else tuned["ob"],
             "kc": kc if kc is not None else tuned["kc"],
@@ -120,7 +125,7 @@ def delta_spmm(x: jnp.ndarray, d: PackedDelta, *, tb: Optional[int] = None,
     """y = x @ dequant(d). x [..., h_in] -> [..., h_out] (f32)."""
     if interpret is None:
         interpret = _INTERPRET
-    t = _tiles(d, tb, ob, kc)
+    t = _tiles(d, tb, ob, kc, t=x.size // x.shape[-1])
     if not kernel_supported(d):
         return fallback.correction_nd(x, d,
                                       gather_max_t=t["gather_max_t"])
@@ -205,7 +210,7 @@ def delta_spmm_segments(x_sorted: jnp.ndarray, d: PackedDelta,
         return fallback.segment_correction(x_sorted, d, seg_rows, seg_offsets,
                                            values=values, res_map=res_map)
     probe = d.index(0)
-    t = _tiles(probe, tb, ob, kc)
+    t = _tiles(probe, tb, ob, kc, t=x_sorted.shape[0])
     if not kernel_supported(probe):
         return fallback.segment_correction(x_sorted, d, seg_rows, seg_offsets)
     T = x_sorted.shape[0]
@@ -292,8 +297,10 @@ def delta_correction_sharded(x: jnp.ndarray, d: PackedDelta, mesh, *,
     # local slice has a different h_out key: it must not flip the
     # formulation — sharded and replicated serving would use different
     # arithmetic — and has no swept autotune entry of its own). Hoisted
-    # above the segments branch: its kernel body needs kc too.
-    t_glob = _tiles(d, tb, ob, None)
+    # above the segments branch: its kernel body needs kc too. The
+    # token-count overlay keys on the GLOBAL row count for the same
+    # reason (per-shard rows would change the key with the data extent).
+    t_glob = _tiles(d, tb, ob, None, t=x.size // x.shape[-1])
     tb, ob = t_glob["tb"], t_glob["ob"]
     kc = t_glob["kc"]
     _note("delta_correction_sharded", sharded=True, codec=d.codec,
@@ -386,7 +393,7 @@ def fused_base_delta(x: jnp.ndarray, w: jnp.ndarray, d: PackedDelta, *,
         interpret = _INTERPRET
     if not kernel_supported(d):
         return (x @ w) + delta_spmm(x, d, interpret=interpret).astype(w.dtype)
-    t = _tiles(d, tb, ob, kc)
+    t = _tiles(d, tb, ob, kc, t=x.size // x.shape[-1])
     lead = x.shape[:-1]
     x2 = x.reshape(-1, d.h_in)
     tb_eff = min(t["tb"], max(_pow2_floor(x2.shape[0]), 8))

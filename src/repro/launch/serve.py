@@ -111,8 +111,9 @@ def main():
                          "DEFAULT-path engine (occupancy admission, packed "
                          "deltas, no mesh) in this process and fail unless "
                          "every request's tokens match exactly; needs "
-                         "--devices N>1, --admission affinity or "
-                         "--residency-mb > 0 to differ from the reference")
+                         "--devices N>1, --admission affinity, --chunked "
+                         "or --residency-mb > 0 to differ from the "
+                         "reference")
     ap.add_argument("--devices", type=int, default=1,
                     help="shard the base model over N devices ((data, "
                          "N/data) mesh; on CPU set XLA_FLAGS=--xla_force_"
@@ -129,6 +130,16 @@ def main():
                          "already hosting the request's tenant within a "
                          "bounded imbalance — fewer unique tenants per "
                          "shard, fewer deltas dequantized per step)")
+    ap.add_argument("--chunked", action="store_true",
+                    help="chunked prefill: prompts stream in --chunk-size "
+                         "token chunks inside the regular decode step "
+                         "(one combined jit) instead of preempting it "
+                         "with a whole-prompt prefill")
+    ap.add_argument("--chunk-size", type=int, default=16,
+                    help="prompt tokens per prefill chunk (--chunked)")
+    ap.add_argument("--chunk-share", type=float, default=1.0,
+                    help="SLO knob: max fraction of decode-active steps "
+                         "that may carry a prefill chunk (--chunked)")
     ap.add_argument("--residency-mb", type=float, default=0.0,
                     help="pre-decoded delta residency budget in MB: hot "
                          "tenants' dequantized f32 delta values stay "
@@ -188,6 +199,9 @@ def main():
             "admission": args.admission,
             "residency_budget_bytes": residency_bytes_from_mb(
                 args.residency_mb),
+            "chunked_prefill": args.chunked,
+            "chunk_size": args.chunk_size,
+            "chunk_share": args.chunk_share,
         }
         if not default_path:
             # observability rides the MAIN engine only — the identity
@@ -217,12 +231,13 @@ def main():
 
     ref_reqs = None
     if args.check_identity:
-        nondefault = args.admission != "occupancy" or args.residency_mb > 0
+        nondefault = args.admission != "occupancy" or args.residency_mb > 0 \
+            or args.chunked
         if mesh is None and not nondefault and args.codec != "mixed":
             raise SystemExit("--check-identity requires --devices N > 1, "
-                             "--admission affinity, --residency-mb > 0 or "
-                             "--codec mixed (nothing to compare against "
-                             "otherwise)")
+                             "--admission affinity, --residency-mb > 0, "
+                             "--chunked or --codec mixed (nothing to "
+                             "compare against otherwise)")
         # single-device reference FIRST (its jits trace without the mesh).
         # With --data N this is also the data=1 reference, and it always
         # runs the default path (occupancy admission, packed deltas) —

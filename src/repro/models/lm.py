@@ -332,6 +332,49 @@ def _attn_block_prefill(cfg, p, d, x, positions, window, cache):
     return x + out, new_cache
 
 
+def _attn_block_chunk(cfg, p, d, x, positions, window, cache, valid):
+    """Multi-token ring attention for one chunked-prefill row.
+
+    The chunk analogue of ``_attn_block_decode``'s per-row branch:
+    ``positions`` [B, C] are absolute prompt positions (a resumable
+    cursor offset, NOT starting at 0). Queries attend the pre-write
+    ring concatenated with the chunk's own K/V (position-masked, so a
+    token sees earlier chunks plus its own prefix), THEN every token's
+    K/V is scattered into its ring slot for the chunks/decodes that
+    follow. ``valid`` [B, C] bool (or None) marks real tokens in a
+    right-padded chunk: pad entries scatter to an out-of-range slot and
+    are dropped, so they can never shadow live ring keys (windowed
+    layers included), their keys sit at positions past every real
+    query (causally masked), and their query outputs are garbage the
+    caller discards.
+    """
+    u = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = qkv_project(u, p, d, cfg, positions)
+    B = x.shape[0]
+    S_c = cache["k"].shape[1]
+    # Attend BEFORE the ring write, over (old ring ++ this chunk): a
+    # windowed layer's ring keeps only the LAST token's window, so
+    # writing all C tokens first would evict up to C-1 keys that the
+    # chunk's earlier queries still need. The pre-write ring holds every
+    # key older than the chunk; the appended segment holds the chunk
+    # itself (causally masked by position). Pad keys carry positions
+    # past every real query, so the causal mask excludes them.
+    k_all = jnp.concatenate([cache["k"], k.astype(cache["k"].dtype)], axis=1)
+    v_all = jnp.concatenate([cache["v"], v.astype(cache["v"].dtype)], axis=1)
+    kp_all = jnp.concatenate([cache["pos"], positions], axis=1)
+    out = attention(q, k_all, v_all, positions, kp_all, window=window,
+                    causal=True, cap=cfg.attn_softcap)
+    slots = positions % S_c                               # [B, C]
+    if valid is not None:
+        slots = jnp.where(valid, slots, S_c)              # pad -> dropped
+    bi = jnp.arange(B)[:, None]
+    ck = cache["k"].at[bi, slots].set(k.astype(cache["k"].dtype), mode="drop")
+    cv = cache["v"].at[bi, slots].set(v.astype(cache["v"].dtype), mode="drop")
+    cp = cache["pos"].at[bi, slots].set(positions, mode="drop")
+    out = apply_linear(out.reshape(*x.shape[:-1], cfg.q_dim), p["wo"], dget(d, "wo"))
+    return x + out, dict(k=ck, v=cv, pos=cp)
+
+
 def _attn_block_decode(cfg, p, d, x, pos, window, cache):
     """Single-token attention over the (ring-buffer) cache.
 
@@ -445,7 +488,8 @@ def _cross_after(cfg) -> set:
 # Layer walk (loop path): used by prefill/decode and heterogeneous training
 # ---------------------------------------------------------------------------
 def _walk(cfg: ArchConfig, params, x, positions, deltas=None, caches=None,
-          memory=None, decode_pos=None, remat=False):
+          memory=None, decode_pos=None, remat=False, chunk=False,
+          chunk_valid=None):
     plan = layer_plan(cfg)
     cross_after = _cross_after(cfg)
     has_cache = caches is not None
@@ -465,6 +509,8 @@ def _walk(cfg: ArchConfig, params, x, positions, deltas=None, caches=None,
             d_a = dindex(dget(deltas, "attn"), ai)
             if decode:
                 x, new_caches[li] = _attn_block_decode(cfg, p_a, d_a, x, decode_pos, window, cache_l)
+            elif cache_l is not None and chunk:
+                x, new_caches[li] = _attn_block_chunk(cfg, p_a, d_a, x, positions, window, cache_l, chunk_valid)
             elif cache_l is not None:
                 x, new_caches[li] = _attn_block_prefill(cfg, p_a, d_a, x, positions, window, cache_l)
             else:
@@ -726,6 +772,40 @@ def prefill(cfg: ArchConfig, params, batch: dict, cache, deltas=None):
                           memory=memory)
     logits = unembed(cfg, params, h[:, -1:], deltas)
     return logits[:, 0], new_caches
+
+
+def prefill_chunk(cfg: ArchConfig, params, batch: dict, cache, deltas=None):
+    """Consume one position-offset prompt chunk against an existing cache.
+
+    The resumable middle of chunked prefill: ``batch["tokens"]`` [B, C]
+    is a slice of the prompt, ``batch["positions"]`` [B, C] its absolute
+    positions (cursor offset — NOT restarting at 0), and ``cache`` the
+    row's cache as earlier chunks left it. No left-padding anywhere:
+    attention layers ring-append the chunk's K/V and attend the whole
+    ring (``_attn_block_chunk``), while ssm/rec mixers continue from
+    their carried state exactly like the exact-bucket prefill path (the
+    train-mode blocks already thread ``state=`` through). An optional
+    ``batch["valid"]`` [B, C] bool marks real tokens when the engine
+    right-pads the tail chunk to a fixed width (attention-only archs:
+    one jit signature per chunk size; pad K/V writes are dropped, pad
+    logits are garbage the caller ignores). Stateful mixers are never
+    padded — the engine sends exact-length tail chunks instead.
+
+    Returns (logits [B, C, V] for EVERY chunk position, new cache): the
+    caller picks the last real position's logits from the final chunk
+    for the first generated token; intermediate chunks' logits are
+    compute-and-discard.
+    """
+    if cfg.family in ("encdec", "vlm"):
+        raise ValueError(
+            f"chunked prefill does not support family={cfg.family!r} "
+            "(per-request encoder inputs); use the whole-prompt path")
+    tokens = batch["tokens"]
+    x = embed_tokens(cfg, params, tokens)
+    h, new_caches = _walk(cfg, params, x, batch["positions"], deltas=deltas,
+                          caches=cache, chunk=True,
+                          chunk_valid=batch.get("valid"))
+    return unembed(cfg, params, h, deltas), new_caches
 
 
 def decode_step(cfg: ArchConfig, params, cache, tokens, pos, deltas=None):

@@ -50,6 +50,8 @@ from repro.serve.kv import SlotKVCache
 from repro.serve.metrics import Metrics
 from repro.serve.trace import EventBus, attribution, path_label
 from repro.serve.scheduler import (
+    ChunkBudget,
+    ChunkQueue,
     LengthBuckets,
     Request,
     RequestQueue,
@@ -347,6 +349,19 @@ class ContinuousEngine:
     all resident skip the per-step unpack; steps that are not fall back
     to the packed path. Token-identical either way.
 
+    ``chunked_prefill=`` swaps the whole-prompt prefill call for the
+    chunk state machine: admission claims the KV slot (reset to the
+    clean template) and queues the request on an EDF
+    :class:`~repro.serve.scheduler.ChunkQueue`; every step then runs ONE
+    combined jit — all decode rows plus at most one ``chunk_size``-token
+    prompt chunk threaded through the same tenant-segment delta dispatch
+    — so prefilling never preempts in-flight decodes and a burst of
+    arrivals amortizes across steps. ``chunk_share`` is the SLO knob
+    (:class:`~repro.serve.scheduler.ChunkBudget`): the max fraction of
+    steps that may carry chunk work while decodes are active. Token-
+    identical to the whole-prompt path (CI-gated at data=1 and the
+    (2,4) mesh); serve/README.md §Chunked prefill has the contract.
+
     ``trace=`` (a :class:`~repro.serve.trace.Tracer`), ``slo=`` (a
     :class:`~repro.serve.telemetry.SLOCounters`) and ``telemetry=`` (a
     :class:`~repro.serve.telemetry.TelemetrySnapshotWriter`) attach
@@ -365,6 +380,8 @@ class ContinuousEngine:
                  shard_deltas: str = "auto",
                  admission="occupancy",
                  residency_budget_bytes: Optional[int] = None,
+                 chunked_prefill: bool = False, chunk_size: int = 16,
+                 chunk_share: float = 1.0,
                  trace=None, slo=None, telemetry=None):
         if cfg.family in ("encdec", "vlm"):
             raise ValueError(
@@ -422,6 +439,29 @@ class ContinuousEngine:
         exact = any(k in ("ssm", "rec") for k in cfg.layer_kinds)
         self.buckets = LengthBuckets(min_bucket=min_bucket,
                                      max_bucket=max_seq, exact=exact)
+        self.chunked = bool(chunked_prefill)
+        self.chunk_size = int(chunk_size)
+        self.chunk_share = float(chunk_share)
+        if self.chunked:
+            # a chunk may not exceed any layer's ring: C tokens scatter
+            # into C distinct slots, and duplicate ring slots within one
+            # chunk would collide nondeterministically
+            min_ring = min((max_seq if w == 0 else min(w, max_seq))
+                           for _, _, w in lm.layer_plan(cfg)
+                           ) if cfg.n_layers else max_seq
+            if not 1 <= self.chunk_size <= min_ring:
+                raise ValueError(
+                    f"chunk_size={chunk_size} must be in [1, {min_ring}] "
+                    f"(the smallest attention ring of this arch/max_seq)")
+        # ssm/rec mixers cannot consume right-padded tail chunks (pad
+        # tokens would pollute the carried state): exact archs get
+        # exact-length tail chunks (one combined shape per distinct tail
+        # length), attn-only archs pad every chunk to chunk_size (ONE
+        # combined shape; pad K/V writes are dropped in the model)
+        self._chunk_pad = not exact
+        self._chunks = ChunkQueue(self.chunk_size)
+        self._chunk_budget = ChunkBudget(self.chunk_share)
+        self._chunk_t0: dict[int, float] = {}    # rid -> admit time
         self.queue = RequestQueue()
         self.sched = Scheduler(n_slots, self.buckets, data_shards=data,
                                admission=admission)
@@ -476,6 +516,48 @@ class ContinuousEngine:
             jit_kw["out_shardings"] = (
                 NamedSharding(mesh, PartitionSpec()), cache_sh)
         self._decode = jax.jit(_step, donate_argnums=(1,), **jit_kw)
+
+        # chunked-prefill steps: decode serves ALL slot rows every step
+        # (fixed shape), so rows that are free or still mid-prefill get
+        # garbage-decoded and then restored from the pre-step cache via
+        # the `act` mask — parked rows must keep their (clean or
+        # partially prefilled) state bit-exact.
+        def _restore(c2, c, act):
+            return jax.tree.map(
+                lambda new, old: jnp.where(
+                    act.reshape(act.shape + (1,) * (new.ndim - 1)), new, old),
+                c2, c)
+
+        def _mstep(p, c, t, pos, act, d):
+            logits, c2 = lm.decode_step(cfg, p, c, t, pos, deltas=d)
+            return (jnp.argmax(logits, axis=-1).astype(jnp.int32),
+                    _restore(c2, c, act))
+
+        def _cstep(p, c, t, pos, act, d, ctok, cpos, cvalid, cslot, cd):
+            # slice the chunk row's CLEAN cache before the masked decode
+            # garbage-writes it; prefill the chunk against that slice and
+            # write the advanced row back after the restore
+            row = jax.tree.map(
+                lambda l: jax.lax.dynamic_slice_in_dim(l, cslot, 1, axis=0), c)
+            logits, c2 = lm.decode_step(cfg, p, c, t, pos, deltas=d)
+            c2 = _restore(c2, c, act)
+            clog, row2 = lm.prefill_chunk(
+                cfg, p, {"tokens": ctok, "positions": cpos, "valid": cvalid},
+                row, deltas=cd)
+            c2 = jax.tree.map(
+                lambda l, r: jax.lax.dynamic_update_slice_in_dim(
+                    l, r.astype(l.dtype), cslot, axis=0), c2, row2)
+            return (jnp.argmax(logits, axis=-1).astype(jnp.int32),
+                    jnp.argmax(clog, axis=-1).astype(jnp.int32), c2)
+
+        mkw = dict(jit_kw)
+        ckw = {}
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            repl = NamedSharding(mesh, PartitionSpec())
+            ckw["out_shardings"] = (repl, repl, cache_sh)
+        self._decode_masked = jax.jit(_mstep, donate_argnums=(1,), **mkw)
+        self._combined = jax.jit(_cstep, donate_argnums=(1,), **ckw)
         self.prefill_shapes: set = set()
 
     # -- tenants ------------------------------------------------------------
@@ -716,12 +798,155 @@ class ContinuousEngine:
         # the unique-tenant segment count of subsequent decode steps
         self._row[slot] = 0
 
-    def _decode_all(self, now: float) -> None:
-        active = self.sched.active_slots()
-        if not active:
-            return
+    # -- chunked prefill ----------------------------------------------------
+    def _admit_chunked(self, slot: int, req: Request, now: float) -> None:
+        """Claim a slot for chunked prefill: no device prefill happens
+        here — the request joins the EDF chunk queue and the combined
+        step streams its prompt in ``chunk_size``-token chunks."""
         self._install_mesh()
         self._refresh_stacked()
+        # the previous occupant's ring pos markers / ssm state would be
+        # attended as valid context by mid-sequence appends: reset first
+        self.kv.reset(slot)
+        row = self._rows.get(req.tenant, 0) if req.tenant else 0
+        self._row[slot] = row
+        self._tok[slot] = 0
+        self._pos[slot] = 0
+        self.sched.place(slot, SlotState(request=req, next_token=0, pos=0,
+                                         tenant_row=row, prefilling=True))
+        self._chunks.add(slot, req)
+        self._chunk_t0[req.rid] = now
+        slack = None if req.deadline is None else req.deadline - now
+        self.bus.emit("admit", now, rid=req.rid, tenant=req.tenant, slot=slot,
+                      wait=now - req.arrival, deadline_slack=slack,
+                      prompt_len=req.prompt_len, bucket=None)
+
+    def _combined_step(self, now: float) -> bool:
+        """One chunked-mode step: all decode rows + at most one prompt
+        chunk, inside ONE jit call. Returns False when idle."""
+        active = self.sched.active_slots()
+        decode_slots = [s for s in active
+                        if not self.sched.slots[s].prefilling]
+        task = None
+        if self._chunk_budget.grant(len(decode_slots), len(self._chunks)):
+            task = self._chunks.next_task()
+        if task is None and not decode_slots:
+            return False
+        self._install_mesh()
+        self._refresh_stacked()
+        act = np.zeros(self.n_slots, bool)
+        act[decode_slots] = True
+        # parked slots (free, or mid-prefill) are masked to tenant row 0
+        # so their tenants are not dequantized and don't inflate the
+        # unique-tenant segment count
+        rows_eff = np.where(act, self._row, 0)
+        sd, res_used = self._slot_delta(rows_eff)
+        if task is None:
+            sig = ("decode_masked", len(self._groups), bool(res_used))
+            with attribution() as notes:
+                nxt, new_cache = self._decode_masked(
+                    self.base, self.kv.cache,
+                    jnp.asarray(self._tok[:, None]), jnp.asarray(self._pos),
+                    jnp.asarray(act), sd)
+            cn = None
+            site = "decode_masked"
+        else:
+            req = task.request
+            C = self.chunk_size if self._chunk_pad else task.length
+            ctok = np.zeros((1, C), np.int32)
+            ctok[0, :task.length] = req.prompt[task.start:
+                                               task.start + task.length]
+            # pad positions run past every real query position, so the
+            # padded keys are causally masked; their K/V ring writes are
+            # dropped by the model's valid mask
+            cpos = (task.start + np.arange(C, dtype=np.int32))[None]
+            cvalid = np.zeros((1, C), bool)
+            cvalid[0, :task.length] = True
+            cd = self._chunk_delta(int(self._row[task.slot]))
+            sig = ("combined", C, len(self._groups), bool(res_used))
+            with attribution() as notes:
+                nxt, cn, new_cache = self._combined(
+                    self.base, self.kv.cache,
+                    jnp.asarray(self._tok[:, None]), jnp.asarray(self._pos),
+                    jnp.asarray(act), sd, jnp.asarray(ctok),
+                    jnp.asarray(cpos), jnp.asarray(cvalid),
+                    jnp.int32(task.slot), cd)
+            site = "combined"
+        if notes:   # non-empty notes == this call (re)traced under jit
+            self.bus.emit("jit_trace", now, signature=sig, site=site,
+                          first=sig not in self._path_notes,
+                          notes=list(notes))
+            self._path_notes[sig] = list(notes)
+        path_notes = self._path_notes.get(sig, [])
+        self.kv.update(new_cache)
+        nxt = np.asarray(nxt)
+        t = self._now()
+        self.bus.emit(
+            "step", t, t_start=now, n_active=len(decode_slots),
+            chunk_tokens=task.length if task is not None else 0,
+            shard_active=self.sched.shard_occupancy() if self.data > 1
+            else None,
+            shard_unique=self.sched.shard_unique_tenants(rows_eff),
+            residency_used=res_used,
+            path="base" if sd is None else path_label(path_notes),
+            notes=path_notes, recompiled=bool(notes))
+        for slot in decode_slots:
+            state = self.sched.slots[slot]
+            req = state.request
+            tok = int(nxt[slot])
+            self._tok[slot] = tok
+            self._pos[slot] += 1
+            state.next_token = tok
+            state.pos = int(self._pos[slot])
+            fin = req.emit(tok)
+            self.bus.emit("token", t, rid=req.rid, tenant=req.tenant)
+            if self.data > 1:
+                self.bus.emit("shard_token", t,
+                              shard=self.sched.shard_of(slot))
+            if fin:
+                self._finish(slot, t)
+        if task is not None:
+            req = task.request
+            self._chunks.advance(task)
+            state = self.sched.slots[task.slot]
+            state.pos = task.start + task.length
+            self.bus.emit("prefill_chunk", t, rid=req.rid, tenant=req.tenant,
+                          slot=task.slot, t_start=now, start=task.start,
+                          length=task.length, last=task.last,
+                          n_decode=len(decode_slots))
+            if task.last:
+                # the final chunk's last real position predicts the first
+                # generated token — exactly what whole-prompt prefill's
+                # h[:, -1:] unembed returns
+                first = int(np.asarray(cn)[0, task.length - 1])
+                L = req.prompt_len
+                self.bus.emit("prefill", t, rid=req.rid, tenant=req.tenant,
+                              t_start=self._chunk_t0.pop(req.rid, now),
+                              prompt_len=L, bucket=None, slot=task.slot)
+                self.bus.emit("first_token", t, rid=req.rid,
+                              tenant=req.tenant, ttft=t - req.arrival)
+                self.bus.emit("token", t, rid=req.rid, tenant=req.tenant)
+                if self.data > 1:
+                    self.bus.emit("shard_token", t,
+                                  shard=self.sched.shard_of(task.slot))
+                req.t_first_token = t
+                self._tok[task.slot] = first
+                self._pos[task.slot] = L
+                state.prefilling = False
+                state.next_token = first
+                state.pos = L
+                fin = req.emit(first)
+                if fin:
+                    self._finish(task.slot, t)
+        return True
+
+    def _slot_delta(self, rows: np.ndarray):
+        """Per-slot delta dispatch tree for one decode step.
+
+        ``rows`` is the [n_slots] GLOBAL tenant-row vector the step should
+        serve (the chunked path masks parked slots to row 0 so their
+        tenants are not dequantized). Returns ``(sd, res_used)``.
+        """
         sd = None
         res_used = None
         parts = []
@@ -731,7 +956,7 @@ class ContinuousEngine:
             # exact 0.0 to the summed correction — which is what keeps
             # mixed-codec decode token-identical to serving each tenant
             # alone
-            rows_g = g.lut[self._row]
+            rows_g = g.lut[rows]
             seg = None
             values = res_map = None
             if self.slot_dispatch == "segments":
@@ -760,7 +985,7 @@ class ContinuousEngine:
                     # structure, so a residency engine compiles at most
                     # TWO decode shapes (values + packed), not per step.
                     # (Residency only exists when len(_groups) == 1, so
-                    # rows_g here is the identity map over self._row.)
+                    # rows_g here is the identity map over `rows`.)
                     rm = self.residency.ensure(rows_g)
                     res_used = rm is not None
                     if res_used:
@@ -771,6 +996,34 @@ class ContinuousEngine:
                                           res_map=res_map))
         if parts:
             sd = combine_slot_deltas(parts)
+        return sd, res_used
+
+    def _chunk_delta(self, row: int):
+        """Batch-1 slot-delta tree for one prefill chunk's tenant row.
+
+        The chunk threads the SAME segment dispatch as decode (one-row
+        segment layout), so its per-tenant correction stays token-
+        identical to the whole-prompt path's per-tenant prefill.
+        """
+        if not self._groups:
+            return None
+        parts = []
+        for g in self._groups:
+            rows_g = np.asarray([g.lut[row]], np.int32)
+            seg = None
+            if self.slot_dispatch == "segments":
+                seg = jax.tree.map(jnp.asarray, tenant_segments(rows_g))
+            parts.append(wrap_slot_deltas(g.stacked, jnp.asarray(rows_g),
+                                          segments=seg))
+        return combine_slot_deltas(parts)
+
+    def _decode_all(self, now: float) -> None:
+        active = self.sched.active_slots()
+        if not active:
+            return
+        self._install_mesh()
+        self._refresh_stacked()
+        sd, res_used = self._slot_delta(self._row)
         sig = ("decode", len(self._groups), bool(res_used))
         with attribution() as notes:
             nxt, new_cache = self._decode(
@@ -814,9 +1067,14 @@ class ContinuousEngine:
         worked = False
         for slot, req in self.sched.admit(self.queue, now):
             self.kv.claim(slot)      # kv free list mirrors the slot table
-            self._prefill_into(slot, req, now)
+            if self.chunked:
+                self._admit_chunked(slot, req, now)
+            else:
+                self._prefill_into(slot, req, now)
             worked = True
-        if self.sched.n_active:
+        if self.chunked:
+            worked = self._combined_step(now) or worked
+        elif self.sched.n_active:
             self._decode_all(now)
             worked = True
         return worked

@@ -48,7 +48,9 @@ class SlotKVCache:
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_seq = max_seq
+        self.enc_len = enc_len
         self.shardings = shardings
+        self._zero_row: Optional[Any] = None
         self.data_shards = data_shards
         self.shard_size = shard_pool_size(n_slots, data_shards)
         cache = lm.init_cache(cfg, n_slots, max_seq, enc_len=enc_len)
@@ -102,6 +104,22 @@ class SlotKVCache:
     def insert(self, slot: int, row_cache: Any) -> None:
         """Copy a batch-1 cache into row ``slot`` of the shared cache."""
         self.cache = self._insert(self.cache, row_cache, jnp.int32(slot))
+
+    def reset(self, slot: int) -> None:
+        """Reset row ``slot`` to the ``init_cache`` template (pos = -1).
+
+        Whole-prompt prefill overwrites the entire row at insert time, so
+        stale state never matters; chunked prefill instead APPENDS into
+        the claimed row mid-sequence, and the previous occupant's ring
+        ``pos`` markers (valid, causally attendable positions) and ssm/
+        rec states would leak into the new sequence. Reuses the insert
+        jit (the zero template is a batch-1 cache like any prefilled
+        row), so this adds no compile shape.
+        """
+        if self._zero_row is None:
+            self._zero_row = lm.init_cache(self.cfg, 1, self.max_seq,
+                                           enc_len=self.enc_len)
+        self.insert(slot, self._zero_row)
 
     def update(self, new_cache: Any) -> None:
         """Swap in the post-decode-step cache."""

@@ -86,6 +86,12 @@ class Metrics:
         # decode steps per attributed dispatch path label
         self.decode_paths: Dict[str, int] = {}
         self.jit_traces = 0
+        # inter-token latency: gap between consecutive "token" events of
+        # one request, pooled across requests. The observable chunked
+        # prefill's SLO knob protects — a prefill that preempts decode
+        # shows up as an ITL spike on every in-flight request.
+        self.itls = StreamingHistogram()
+        self._last_token_t: Dict[int, float] = {}   # rid -> last token time
         self.t_start: Optional[float] = None
         self.t_end: Optional[float] = None
 
@@ -106,12 +112,19 @@ class Metrics:
                 self.decode_paths[path] = self.decode_paths.get(path, 0) + 1
         elif kind == "token":
             self.record_token(a.get("tenant"), a.get("n", 1))
+            rid = a.get("rid")
+            if rid is not None:
+                last = self._last_token_t.get(rid)
+                if last is not None:
+                    self.itls.record(max(0.0, ev.t - last))
+                self._last_token_t[rid] = ev.t
         elif kind == "admit":
             self.record_admit(a.get("tenant"), a["wait"])
         elif kind == "first_token":
             self.record_first_token(a.get("tenant"), a["ttft"])
         elif kind == "done":
             self.record_done(a.get("tenant"), a["latency"])
+            self._last_token_t.pop(a.get("rid"), None)
         elif kind == "shard_token":
             self.record_shard_token(a["shard"], a.get("n", 1))
         elif kind == "start":
@@ -256,6 +269,8 @@ class Metrics:
             # is not a p50)
             "ttft_p50": pooled_ttft.percentile(50),
             "ttft_p95": pooled_ttft.percentile(95),
+            "itl_p50": self.itls.percentile(50),
+            "itl_p95": self.itls.percentile(95),
             "decode_paths": dict(sorted(self.decode_paths.items())) or None,
             "tenants": {k: t.report(wall) for k, t in sorted(self.tenants.items())},
         }

@@ -353,6 +353,10 @@ class SlotState:
     next_token: int                  # last sampled token (decode input)
     pos: int                         # next decode position (= tokens so far)
     tenant_row: int                  # row in the tenant-stacked delta tree
+    # chunked prefill: the slot is claimed (KV row reserved, mid-prefill)
+    # but not yet decoding — the combined step masks it out of the decode
+    # rows and restores its cache row untouched
+    prefilling: bool = False
 
 
 class Scheduler:
@@ -481,6 +485,117 @@ class Scheduler:
                 f"from slot {slot}")
         self.slots[slot] = None
         return state.request
+
+
+@dataclass
+class ChunkTask:
+    """One prompt chunk picked for the next combined step."""
+    slot: int
+    request: Request
+    start: int                       # cursor: prompt tokens already consumed
+    length: int                      # tokens in this chunk (<= chunk_size)
+    last: bool                       # final chunk -> first token after this
+
+
+class ChunkQueue:
+    """EDF-ordered queue of admitted, mid-prefill requests.
+
+    Chunked prefill admits a request by claiming its KV slot, then feeds
+    the prompt through the combined decode step ``chunk_size`` tokens at
+    a time. This queue owns the **resumable per-request chunk cursors**:
+    ``next_task`` peeks the head request's next chunk (earliest deadline
+    first, ties by arrival then rid — the same order ``RequestQueue.
+    pop_ready`` admits in), and ``advance`` moves the cursor only after
+    the engine actually processed the chunk, so a step that skips chunk
+    work (budget denied) repicks the identical task later. Cursors are
+    strictly monotone and a request leaves the queue exactly when its
+    cursor reaches the prompt length — the property suite pins both.
+    """
+
+    def __init__(self, chunk_size: int):
+        if chunk_size < 1:
+            raise ValueError(f"chunk_size={chunk_size} must be >= 1")
+        self.chunk_size = chunk_size
+        self._entries: dict[int, tuple] = {}     # rid -> (slot, Request)
+        self._cursors: dict[int, int] = {}       # rid -> tokens consumed
+
+    def add(self, slot: int, req: Request) -> None:
+        assert req.rid not in self._entries, f"rid {req.rid} already queued"
+        self._entries[req.rid] = (slot, req)
+        self._cursors[req.rid] = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def cursor(self, rid: int) -> int:
+        return self._cursors[rid]
+
+    def pending_tokens(self) -> int:
+        """Prompt tokens not yet consumed across all queued requests."""
+        return sum(req.prompt_len - self._cursors[rid]
+                   for rid, (_, req) in self._entries.items())
+
+    def next_task(self) -> Optional[ChunkTask]:
+        """The EDF-head request's next chunk; does NOT advance the cursor."""
+        if not self._entries:
+            return None
+        rid = min(self._entries, key=lambda r: (
+            self._entries[r][1].deadline
+            if self._entries[r][1].deadline is not None else float("inf"),
+            self._entries[r][1].arrival, r))
+        slot, req = self._entries[rid]
+        start = self._cursors[rid]
+        length = min(self.chunk_size, req.prompt_len - start)
+        return ChunkTask(slot=slot, request=req, start=start, length=length,
+                         last=start + length >= req.prompt_len)
+
+    def advance(self, task: ChunkTask) -> None:
+        """Move the cursor past a processed chunk; pop the request when
+        its whole prompt has been consumed."""
+        rid = task.request.rid
+        if self._cursors.get(rid) != task.start:
+            raise ValueError(
+                f"stale chunk task for rid {rid}: cursor is "
+                f"{self._cursors.get(rid)}, task starts at {task.start}")
+        self._cursors[rid] = task.start + task.length
+        if task.last:
+            del self._entries[rid]
+            del self._cursors[rid]
+
+
+class ChunkBudget:
+    """Per-step chunk-budget policy under the decode-SLO knob.
+
+    ``share`` in (0, 1] is the maximum fraction of combined steps that
+    may carry prefill-chunk work while decode rows are active — the knob
+    trading TTFT (chunks land sooner) against ITL (every chunk-carrying
+    step is a little slower for the in-flight decodes). Implemented as a
+    deterministic token bucket: each ``grant`` call with active decode
+    rows accrues ``share`` credit (capped at 1, so idle stretches never
+    bank a burst) and a granted chunk spends 1, so over any window of n
+    such steps at most ``ceil(share * n)`` chunks run, and with
+    share=1.0 (the TTFT-first default) every step may carry one. Steps
+    with NO active decode rows always grant — there is no ITL left to
+    protect, and refusing would deadlock the drain loop.
+    """
+
+    def __init__(self, share: float = 1.0):
+        if not 0.0 < share <= 1.0:
+            raise ValueError(f"chunk share={share} must be in (0, 1]")
+        self.share = float(share)
+        self._credit = 0.0
+
+    def grant(self, n_decode_active: int, n_pending: int) -> bool:
+        """Decide whether THIS step may process one prefill chunk."""
+        if n_pending == 0:
+            return False
+        if n_decode_active == 0:
+            return True
+        self._credit = min(1.0, self._credit + self.share)
+        if self._credit >= 1.0:
+            self._credit -= 1.0
+            return True
+        return False
 
 
 class VirtualClock:

@@ -22,9 +22,10 @@ Three pieces:
 * **Chrome-trace export** — :meth:`Tracer.export` writes Chrome/Perfetto
   "trace event" JSON (open at https://ui.perfetto.dev). Track layout:
   pid 1 = one tid per request (queue_wait / prefill / decode child
-  spans under a root request span, first-token instant); pid 2 = the
-  engine (decode_step spans with path-attribution args, jit_trace
-  instants).
+  spans under a root request span, first-token instant; chunked-prefill
+  engines additionally emit one ``prefill_chunk`` span per chunk, so
+  chunk scheduling is visible per request); pid 2 = the engine
+  (decode_step spans with path-attribution args, jit_trace instants).
 
 The tracer holds **no clock**: every timestamp comes from events, which
 carry the engine's injectable clock — traces are deterministic under
@@ -230,6 +231,22 @@ class Tracer:
             "slot": ev.attrs.get("slot"),
         })
 
+    def _on_prefill_chunk(self, ev: ServeEvent) -> None:
+        """One chunk of a chunked prefill: a child span on the request
+        track. The whole-prompt ``prefill`` span still closes the
+        lifecycle when the LAST chunk lands (emitted by the engine), so
+        chunk spans are pure detail under it."""
+        rid = ev.attrs["rid"]
+        t0 = ev.attrs.get("t_start", ev.t)
+        self._span("prefill_chunk", self._PID_REQ, rid, t0, ev.t, {
+            "tenant": ev.attrs.get("tenant"),
+            "start": ev.attrs.get("start"),
+            "length": ev.attrs.get("length"),
+            "last": ev.attrs.get("last"),
+            "slot": ev.attrs.get("slot"),
+            "n_decode": ev.attrs.get("n_decode"),
+        })
+
     def _on_first_token(self, ev: ServeEvent) -> None:
         self._instant("first_token", self._PID_REQ, ev.attrs["rid"], ev.t, {
             "ttft_s": ev.attrs.get("ttft"),
@@ -357,6 +374,41 @@ def validate_chrome_trace(trace: dict) -> List[str]:
     if requests and not ok_lifecycle:
         problems.append(
             "no request span has child prefill+decode spans on its track")
+
+    # chunked-prefill traces: every prefill_chunk span must sit on a
+    # request track, inside that request's interval, and the chunk
+    # cursors on one track must be contiguous (start_{i+1} = start_i +
+    # length_i) ending in exactly one last=True chunk
+    req_by_tid = {r["tid"]: (r["ts"], r["ts"] + r.get("dur", 0))
+                  for r in requests}
+    chunks_by_tid: dict = {}
+    for e in spans:
+        if e["name"] != "prefill_chunk":
+            continue
+        tid = e["tid"]
+        if tid not in req_by_tid:
+            problems.append(f"prefill_chunk span on tid {tid} "
+                            "with no request span")
+            continue
+        t0, t1 = req_by_tid[tid]
+        if not (e["ts"] >= t0 - 1e-6
+                and e["ts"] + e.get("dur", 0) <= t1 + 1e-6):
+            problems.append(
+                f"prefill_chunk span on tid {tid} outside its request")
+        chunks_by_tid.setdefault(tid, []).append(e["args"])
+    for tid, chunks in chunks_by_tid.items():
+        chunks.sort(key=lambda a: a.get("start", 0))
+        cursor = 0
+        for a in chunks:
+            if a.get("start") != cursor:
+                problems.append(
+                    f"prefill_chunk cursor gap on tid {tid}: "
+                    f"start={a.get('start')} expected {cursor}")
+                break
+            cursor += a.get("length", 0)
+        if sum(1 for a in chunks if a.get("last")) != 1:
+            problems.append(
+                f"tid {tid} does not end in exactly one last=True chunk")
     return problems
 
 

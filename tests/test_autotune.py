@@ -41,6 +41,52 @@ def test_envelope_key_none_bits():
     assert autotune.envelope_key(16, 2, None, 64, 128) == "16/2/None/64/128"
 
 
+def test_snap_t_grid():
+    assert autotune.snap_t(1) == 1
+    assert autotune.snap_t(5) == 8
+    assert autotune.snap_t(16) == 16
+    assert autotune.snap_t(17) == 32
+    assert autotune.snap_t(10_000) == autotune.T_GRID[-1]
+
+
+def test_envelope_key_with_t():
+    got = autotune.envelope_key(64, 8, 4, 128, 256, t=13)
+    assert got == "64/8/4/128/256@T16"
+
+
+def test_lookup_t_overlay_tiles_only(tmp_path, monkeypatch):
+    """A v3 ``@T`` entry overlays kernel tiles only; ``gather_max_t``
+    always comes from the base entry so the formulation threshold stays
+    one monotone function of T (the identity contract)."""
+    path = tmp_path / "table.json"
+    base = autotune.envelope_key(64, 8, 4, 128, 256)
+    ov = autotune.envelope_key(64, 8, 4, 128, 256, t=16)
+    path.write_text(json.dumps({"version": 3, "entries": {
+        base: {"tb": 128, "ob": 128, "kc": 8, "gather_max_t": 64},
+        ov: {"tb": 32, "formulation": "gather", "gather_us": 1.0,
+             "dense_us": 9.0, "gather_max_t": 7}}}))
+    monkeypatch.setenv("REPRO_AUTOTUNE_TABLE", str(path))
+    got = autotune.lookup(64, 8, 4, 128, 256, t=13)   # snaps to @T16
+    assert got["tb"] == 32                            # per-T tile wins
+    assert got["ob"] == 128                           # base fills the rest
+    assert got["gather_max_t"] == 64   # overlay must NOT move the crossover
+    # no overlay swept at this T -> pure base entry
+    assert autotune.lookup(64, 8, 4, 128, 256, t=256)["tb"] == 128
+
+
+def test_lookup_floors_gather_max_t(tmp_path, monkeypatch):
+    """Identity floor: decode-sized batches keep the gather formulation
+    (the segment dispatch always gathers) even if a stale or hand-edited
+    table stores a lower crossover."""
+    path = tmp_path / "table.json"
+    key = autotune.envelope_key(64, 8, 4, 128, 256)
+    path.write_text(json.dumps(
+        {"version": 3, "entries": {key: {"gather_max_t": 4}}}))
+    monkeypatch.setenv("REPRO_AUTOTUNE_TABLE", str(path))
+    got = autotune.lookup(64, 8, 4, 128, 256)
+    assert got["gather_max_t"] == autotune.MIN_GATHER_T
+
+
 def test_corrupt_table_falls_back(tmp_path, monkeypatch):
     path = tmp_path / "bad.json"
     path.write_text("{not json")

@@ -1,0 +1,346 @@
+"""Chunked prefill: token identity, chunk-scheduler properties, tracing.
+
+The acceptance bar for the chunked-prefill path:
+* a chunked engine is **token-identical** to the whole-prompt engine on
+  the same mixed stream — for plain attention, windowed attention (ring
+  eviction mid-prompt), and state-carrying mixers (exact-length chunks),
+* the chunk scheduler is safe under any interleaving: cursors advance
+  strictly and resume exactly after a denied step, the budget never
+  over-grants past its share, decode rows never starve,
+* VirtualClock runs are byte-identical trace-to-trace, and the exported
+  trace's ``prefill_chunk`` spans tile each prompt contiguously.
+
+Determinism: every engine runs on a VirtualClock and every random draw
+is explicitly seeded (the property tests must shrink reproducibly).
+"""
+import json
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import DeltaDQSpec, compress
+from repro.models import lm
+from repro.serve import ContinuousEngine, Engine, VirtualClock
+from repro.serve.scheduler import ChunkBudget, ChunkQueue, RequestQueue
+from repro.serve.trace import Tracer, validate_chrome_trace
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+SPEC = DeltaDQSpec(alpha=2.0, k_bits=8, h_g=32)
+
+
+def _make_tenants(cfg, base, n, rng, scale=0.05):
+    out = []
+    for t in range(n):
+        ft = jax.tree.map(
+            lambda p, t=t: p + scale * jax.random.normal(
+                jax.random.fold_in(rng, 7 + t), p.shape,
+                jnp.float32).astype(p.dtype)
+            if p.ndim >= 2 else p, base)
+        deltas, _ = compress(base, ft, SPEC)
+        out.append(deltas)
+    return out
+
+
+@pytest.fixture(scope="module")
+def llama_setup():
+    cfg = get_smoke_config("llama3.2-1b")
+    rng = jax.random.PRNGKey(0)
+    base = lm.init_params(cfg, rng)
+    tenants = _make_tenants(cfg, base, 2, rng)
+    return cfg, base, tenants
+
+
+def _mixed_stream(cfg, rng, lengths, n_tenants):
+    reqs = []
+    for i, L in enumerate(lengths):
+        prompt = np.asarray(jax.random.randint(
+            jax.random.fold_in(rng, 100 + i), (L,), 0, cfg.vocab))
+        tenant = f"t{i % n_tenants}" if i % 3 else None
+        reqs.append((tenant, prompt))
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# Token identity: chunked == whole-prompt, across arch families
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("chunk_size", [3, 8])
+def test_chunked_token_identical_mixed_stream(llama_setup, chunk_size):
+    """Staggered multi-tenant stream, more requests than slots, prompts
+    spanning chunk boundaries (L < C, L == C, L > 2C): every request's
+    output must match the whole-prompt reference engine exactly."""
+    cfg, base, tenants = llama_setup
+    eng = ContinuousEngine(cfg, base, n_slots=3, max_seq=32,
+                           clock=VirtualClock(tick=1e-3),
+                           chunked_prefill=True, chunk_size=chunk_size)
+    ref = Engine(cfg, base, max_seq=32)
+    for i, d in enumerate(tenants):
+        eng.register_tenant(f"t{i}", d)
+        ref.register_tenant(f"t{i}", d)
+    assert eng._chunk_pad                     # attention arch: padded chunks
+
+    rng = jax.random.PRNGKey(9)
+    stream = _mixed_stream(cfg, rng, (5, 9, 3, 12, 8, 7), 2)
+    handles = [eng.submit(t, p, max_new_tokens=5, arrival=0.002 * i)
+               for i, (t, p) in enumerate(stream)]
+    eng.run()
+    for (tenant, prompt), r in zip(stream, handles):
+        want = ref.generate(tenant, prompt[None], max_new_tokens=5)[0]
+        np.testing.assert_array_equal(r.output(), want, err_msg=str(tenant))
+
+
+def test_chunked_ssm_exact_tail_chunks():
+    """State-carrying mixers can't see pad tokens mid-sequence: chunks
+    are exact-length (tail chunk shorter), still token-identical."""
+    cfg = get_smoke_config("mamba2-370m")
+    rng = jax.random.PRNGKey(0)
+    base = lm.init_params(cfg, rng)
+    tenants = _make_tenants(cfg, base, 2, rng)
+    eng = ContinuousEngine(cfg, base, n_slots=2, max_seq=32,
+                           clock=VirtualClock(tick=1e-3),
+                           chunked_prefill=True, chunk_size=4)
+    ref = Engine(cfg, base, max_seq=32)
+    for i, d in enumerate(tenants):
+        eng.register_tenant(f"t{i}", d)
+        ref.register_tenant(f"t{i}", d)
+    assert not eng._chunk_pad                 # exact buckets -> exact chunks
+
+    prompts = [np.asarray(jax.random.randint(
+        jax.random.fold_in(rng, 60 + i), (L,), 0, cfg.vocab))
+        for i, L in enumerate((6, 9, 5))]
+    rs = [eng.submit(f"t{i % 2}", p, max_new_tokens=4)
+          for i, p in enumerate(prompts)]
+    eng.run()
+    for i, (p, r) in enumerate(zip(prompts, rs)):
+        want = ref.generate(f"t{i % 2}", p[None], max_new_tokens=4)[0]
+        np.testing.assert_array_equal(r.output(), want)
+
+
+def test_chunked_windowed_attention_ring():
+    """Windowed layers evict ring entries as the chunk is written: the
+    chunk path must attend BEFORE the scatter, or mid-prompt history
+    silently vanishes. gemma3's mixed {global, window-8} layers cover
+    both layer kinds in one model."""
+    cfg = get_smoke_config("gemma3-1b")
+    rng = jax.random.PRNGKey(0)
+    base = lm.init_params(cfg, rng)
+    tenants = _make_tenants(cfg, base, 1, rng)
+    eng = ContinuousEngine(cfg, base, n_slots=2, max_seq=32,
+                           clock=VirtualClock(tick=1e-3),
+                           chunked_prefill=True, chunk_size=4)
+    ref = Engine(cfg, base, max_seq=32)
+    eng.register_tenant("t0", tenants[0])
+    ref.register_tenant("t0", tenants[0])
+
+    # prompts longer than the window (8) so eviction happens mid-prefill
+    prompts = [np.asarray(jax.random.randint(
+        jax.random.fold_in(rng, 80 + i), (L,), 0, cfg.vocab))
+        for i, L in enumerate((11, 6, 14))]
+    rs = [eng.submit("t0" if i % 2 else None, p, max_new_tokens=3)
+          for i, p in enumerate(prompts)]
+    eng.run()
+    for i, (p, r) in enumerate(zip(prompts, rs)):
+        want = ref.generate("t0" if i % 2 else None, p[None],
+                            max_new_tokens=3)[0]
+        np.testing.assert_array_equal(r.output(), want)
+
+
+def test_chunk_size_validation():
+    cfg = get_smoke_config("llama3.2-1b")
+    base = lm.init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError):
+        ContinuousEngine(cfg, base, n_slots=2, max_seq=16,
+                         chunked_prefill=True, chunk_size=0)
+    with pytest.raises(ValueError):           # chunk can't exceed the ring
+        ContinuousEngine(cfg, base, n_slots=2, max_seq=16,
+                         chunked_prefill=True, chunk_size=17)
+    # windowed arch: the smallest ring (window 8) bounds the chunk
+    wcfg = get_smoke_config("gemma3-1b")
+    wbase = lm.init_params(wcfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError):
+        ContinuousEngine(wcfg, wbase, n_slots=2, max_seq=32,
+                         chunked_prefill=True, chunk_size=16)
+
+
+# ---------------------------------------------------------------------------
+# Trace: prefill_chunk spans, starvation-freedom, determinism
+# ---------------------------------------------------------------------------
+class _Recorder:
+    def __init__(self):
+        self.events = []
+
+    def consume(self, ev):
+        self.events.append(ev)
+
+
+def _run_traced_chunked(chunk_size=4, tick=1e-3):
+    cfg = get_smoke_config("llama3.2-1b")
+    rng = jax.random.PRNGKey(0)
+    base = lm.init_params(cfg, rng)
+    [deltas] = _make_tenants(cfg, base, 1, rng)
+    tracer = Tracer()
+    rec = _Recorder()
+    eng = ContinuousEngine(cfg, base, n_slots=2, max_seq=32,
+                           clock=VirtualClock(tick=tick), trace=tracer,
+                           chunked_prefill=True, chunk_size=chunk_size)
+    eng.bus.attach(rec)
+    eng.register_tenant("t0", deltas)
+    lengths = (9, 5, 7, 11)
+    for i, L in enumerate(lengths):
+        eng.submit("t0" if i % 2 else None, np.arange(L) % cfg.vocab,
+                   max_new_tokens=4, arrival=0.001 * i)
+    eng.run()
+    return tracer, rec, lengths, chunk_size
+
+
+def test_chunked_trace_spans_and_no_starvation():
+    tracer, rec, lengths, C = _run_traced_chunked()
+    trace = tracer.to_chrome_trace()
+    assert validate_chrome_trace(trace) == []
+
+    spans = [e for e in trace["traceEvents"] if e.get("ph") == "X"
+             and e["name"] == "prefill_chunk"]
+    assert len(spans) == sum(math.ceil(L / C) for L in lengths)
+
+    # every step advances EVERY active decode row (no starvation): the
+    # token events landing at a step's timestamp must cover n_active,
+    # plus one first-token when that step completed a prompt
+    by_kind = {}
+    for ev in rec.events:
+        by_kind.setdefault(ev.kind, []).append(ev)
+    tokens_at = {}
+    for ev in by_kind.get("token", []):
+        tokens_at[ev.t] = tokens_at.get(ev.t, 0) + 1
+    for step in by_kind["step"]:
+        lasts = sum(1 for e in by_kind.get("prefill_chunk", [])
+                    if e.t == step.t and e.attrs["last"])
+        want = step.attrs["n_active"] + lasts
+        if want:
+            assert tokens_at.get(step.t, 0) == want
+    # chunk cursors in the event stream tile each prompt contiguously
+    cursors = {}
+    for ev in by_kind["prefill_chunk"]:
+        rid = ev.attrs["rid"]
+        assert ev.attrs["start"] == cursors.get(rid, 0)
+        cursors[rid] = ev.attrs["start"] + ev.attrs["length"]
+
+
+def test_chunked_virtualclock_trace_byte_identical():
+    """Same workload, fresh engine, same VirtualClock -> byte-identical
+    trace JSON (the CI determinism contract extends to chunked mode)."""
+    t1, _, _, _ = _run_traced_chunked()
+    t2, _, _, _ = _run_traced_chunked()
+    assert json.dumps(t1.to_chrome_trace(), sort_keys=True) \
+        == json.dumps(t2.to_chrome_trace(), sort_keys=True)
+
+
+# ---------------------------------------------------------------------------
+# Property-based chunk-scheduler invariants (hypothesis; skipped if absent)
+# ---------------------------------------------------------------------------
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=120, deadline=None)
+    @given(chunk_size=st.integers(1, 8),
+           reqs=st.lists(st.tuples(
+               st.integers(1, 40),                       # prompt length
+               st.one_of(st.none(), st.floats(0, 10, allow_nan=False)),
+               st.floats(0, 5, allow_nan=False)),        # arrival
+               min_size=1, max_size=8),
+           denies=st.lists(st.booleans(), max_size=64))
+    def test_prop_chunk_queue_cursors_edf_resume(chunk_size, reqs, denies):
+        """Any admission set, any budget-denial pattern: next_task always
+        returns the EDF head's next chunk, a denied step repicks the
+        IDENTICAL task later, cursors advance strictly monotonically by
+        exactly the processed length, every request takes ceil(L/C)
+        chunks, and a stale advance raises instead of corrupting."""
+        q = RequestQueue()
+        cq = ChunkQueue(chunk_size)
+        for slot, (L, dl, arr) in enumerate(reqs):
+            r = q.submit(None, np.zeros(L), arrival=arr, deadline=dl)
+            cq.add(slot, r)
+        chunks_taken = {}
+        seen_cursor = {}
+        deny = iter(denies)
+        while len(cq):
+            task = cq.next_task()
+            # EDF: no queued request sorts strictly before the pick
+            key = (task.request.deadline if task.request.deadline
+                   is not None else float("inf"),
+                   task.request.arrival, task.request.rid)
+            for rid, (_, r) in cq._entries.items():
+                assert key <= (r.deadline if r.deadline is not None
+                               else float("inf"), r.arrival, rid)
+            if next(deny, False):             # budget denied: no advance
+                again = cq.next_task()
+                assert (again.slot, again.request.rid, again.start,
+                        again.length, again.last) == \
+                    (task.slot, task.request.rid, task.start,
+                     task.length, task.last)
+                continue
+            rid = task.request.rid
+            assert task.start == seen_cursor.get(rid, 0)
+            assert 1 <= task.length <= chunk_size
+            assert task.last == \
+                (task.start + task.length >= task.request.prompt_len)
+            cq.advance(task)
+            seen_cursor[rid] = task.start + task.length
+            chunks_taken[rid] = chunks_taken.get(rid, 0) + 1
+            if not task.last:
+                assert cq.cursor(rid) == seen_cursor[rid]
+                with pytest.raises(ValueError):
+                    cq.advance(task)          # stale cursor must raise
+            else:
+                assert rid not in cq._entries
+        assert len(cq) == 0 and cq.pending_tokens() == 0
+        # every request consumed exactly ceil(L / C) chunks
+        assert sorted(chunks_taken.values()) == sorted(
+            math.ceil(L / chunk_size) for (L, _, _) in reqs)
+
+    @settings(max_examples=200, deadline=None)
+    @given(share=st.floats(0.05, 1.0, allow_nan=False),
+           calls=st.lists(st.tuples(st.integers(0, 6), st.integers(0, 6)),
+                          min_size=1, max_size=80))
+    def test_prop_chunk_budget_share_bounds(share, calls):
+        """Deterministic token bucket: never grants without pending work,
+        always grants when no decode rows need protecting, and over the
+        decode-active calls grants at most ceil(share*n)+1 chunks while
+        never going longer than ceil(1/share)+1 such calls between
+        grants (chunks are throttled, never starved)."""
+        b = ChunkBudget(share)
+        active_calls = 0
+        grants = 0
+        gap = 0
+        for n_decode, n_pending in calls:
+            got = b.grant(n_decode, n_pending)
+            if n_pending == 0:
+                assert not got
+                continue
+            if n_decode == 0:
+                assert got                    # nothing to protect: drain
+                continue
+            active_calls += 1
+            if got:
+                grants += 1
+                gap = 0
+            else:
+                gap += 1
+            assert gap <= math.ceil(1.0 / share) + 1
+        assert grants <= math.ceil(share * active_calls) + 1
+        if share == 1.0:
+            assert grants == active_calls     # TTFT-first default
+
+    def test_chunk_budget_validation():
+        with pytest.raises(ValueError):
+            ChunkBudget(0.0)
+        with pytest.raises(ValueError):
+            ChunkBudget(1.5)
+        with pytest.raises(ValueError):
+            ChunkQueue(0)
