@@ -404,6 +404,100 @@ def residency_memory_trade(n_tenants: int = 24, n_requests: int = 24,
     return out
 
 
+def tenant_lifecycle(n_tenants: int = 3, max_new: int = 8,
+                     n_slots: int = 4) -> dict:
+    """Online tenant lifecycle row: raw checkpoint -> compress ->
+    hot-register into a RUNNING engine -> first token.
+
+    tenant0 is registered up front (it builds the tenant table and pays
+    the delta-decode jit trace); tenants 1..N then arrive while
+    tenant0's sequences are decoding, and each row measures
+    ``compress_s`` (core.compress wall), ``register_s`` (the table row
+    write) and ``register_to_first_token_s`` (checkpoint arrival to that
+    tenant's first served token, engine live throughout). The gated
+    invariant is ``decode_recompiles == 0``: hot registration, rollout
+    and retirement must never retrace the decode step. Deterministic
+    scheduling via VirtualClock; the wall times are real compute.
+    """
+    from repro.serve import DeltaRegistry, VirtualClock
+
+    cfg = get_smoke_config("llama3.2-1b")
+    rng = jax.random.PRNGKey(0)
+    base = lm.init_params(cfg, rng)
+    # +2 rows: every tenant resident plus one spare for the rollout
+    eng = ContinuousEngine(cfg, base, n_slots=n_slots, max_seq=64,
+                           tenant_capacity=n_tenants + 2,
+                           clock=VirtualClock(tick=1e-3))
+    reg = DeltaRegistry(eng, base, spec=SERVE_SPEC, codec=None)
+
+    def ft_of(seed):
+        return jax.tree.map(
+            lambda p: p + 0.02 * jax.random.normal(
+                jax.random.fold_in(rng, seed), p.shape,
+                jnp.float32).astype(p.dtype)
+            if p.ndim >= 2 else p, base)
+
+    # tenant0 + warmup: the table exists and every jit shape (both
+    # prompt buckets + the grouped decode) is compiled before the
+    # measured registrations — their cost is lifecycle, not XLA
+    reg.ingest("tenant0", ft_of(7)); reg.pump()
+    warm = [eng.submit("tenant0", np.zeros(L, np.int32), max_new_tokens=2)
+            for L in (4, 12)]
+    eng.run()
+    assert all(w.done for w in warm)
+    compiles_before = eng._decode._cache_size()
+
+    rs = np.random.RandomState(0)
+    inflight = [eng.submit("tenant0",
+                           rs.randint(0, cfg.vocab, size=8).astype(np.int32),
+                           max_new_tokens=max_new)]
+    eng.step(eng._now())                # tenant0 genuinely in flight
+    rows = []
+    for t in range(1, n_tenants + 1):
+        name = f"tenant{t}"
+        t0 = time.perf_counter()
+        reg.ingest(name, ft_of(7 + t))
+        reg.pump()                      # hot-register into the live engine
+        rec = reg._records[name]
+        req = reg.submit(name, rs.randint(0, cfg.vocab, size=8).astype(
+            np.int32), max_new_tokens=max_new)
+        while not req.tokens:
+            eng.step(eng._now())
+        rows.append({"tenant": name, "compress_s": rec.compress_s,
+                     "register_s": rec.register_s,
+                     "register_to_first_token_s": time.perf_counter() - t0})
+        inflight.append(req)
+    eng.run()
+    assert all(r.done for r in inflight)
+
+    t0 = time.perf_counter()
+    reg.ingest("tenant0", ft_of(777)); reg.pump()    # version rollout
+    rollout_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    eng.unregister_tenant("tenant1")                 # drained: retire
+    retire_s = time.perf_counter() - t0
+
+    recompiles = eng._decode._cache_size() - compiles_before
+    out = {
+        "n_tenants": n_tenants,
+        "tenants": rows,
+        "compress_s_mean": float(np.mean([r["compress_s"] for r in rows])),
+        "register_s_mean": float(np.mean([r["register_s"] for r in rows])),
+        "register_to_first_token_s_mean": float(np.mean(
+            [r["register_to_first_token_s"] for r in rows])),
+        "rollout_s": rollout_s,
+        "retire_s": retire_s,
+        "decode_recompiles": recompiles,
+        "lifecycle_events": eng.metrics.report()["tenant_lifecycle"],
+    }
+    print(f"tenant_lifecycle: compress {out['compress_s_mean']:.2f}s, "
+          f"register {1e3 * out['register_s_mean']:.0f}ms, "
+          f"register->first token {out['register_to_first_token_s_mean']:.2f}s"
+          f" mean of {n_tenants}; rollout {1e3 * rollout_s:.0f}ms, retire "
+          f"{1e3 * retire_s:.0f}ms, decode recompiles {recompiles}")
+    return out
+
+
 def compare_against(fresh: dict, baseline_path: str, tolerance: float) -> list:
     """Regressions of the fresh run vs a committed baseline (throughput
     may not drop below baseline/tolerance; decode latency may not grow
@@ -461,6 +555,15 @@ def compare_against(fresh: dict, baseline_path: str, tolerance: float) -> list:
                 f"chunked prefill throughput "
                 f"{zp['tps_chunked_vs_unchunked_x']:.2f}x of its "
                 f"unchunked twin (< 1/1.05) on the zipf row")
+    # lifecycle gate: hot registration / rollout / retirement must not
+    # retrace the decode step — a recompile count is exact (jit cache
+    # size, not wall clock), so it gates at 0 with no tolerance
+    tl = fresh.get("tenant_lifecycle")
+    if tl and tl.get("decode_recompiles", 0) != 0:
+        fails.append(
+            f"tenant_lifecycle: {tl['decode_recompiles']} decode-step "
+            "recompile(s) across hot registration/rollout/retire "
+            "(must be exactly 0)")
     base_us = baseline.get("micro", {}).get("decode_with_delta_us")
     fresh_us = fresh.get("micro", {}).get("decode_with_delta_us")
     if base_us and fresh_us and fresh_us > base_us * tolerance:
@@ -581,6 +684,10 @@ def main():
             report["continuous_data2"] = continuous_bench(
                 2, n_requests=8, devices=args.devices, data=2)
 
+    # tenant-lifecycle row: hot compress-and-register into a running
+    # engine; its decode_recompiles==0 gate is deterministic (jit cache
+    # size), so it runs — and gates — in quick mode too
+    report["tenant_lifecycle"] = tenant_lifecycle()
     # chunked-prefill zipf row: same-trace twin (chunked vs whole-prompt)
     # under sustained hot-tenant load across the full bucket ladder; its
     # gate is within-process (twin ratio), so it runs in quick mode too

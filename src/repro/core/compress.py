@@ -23,9 +23,10 @@ report so nothing is silently dropped.
 """
 from __future__ import annotations
 
+import time
 import zlib
 from dataclasses import dataclass, field
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -71,6 +72,9 @@ class CompressionReport:
     # auto-picker records: path -> {codec, bits_per_element, rel_error, budget_met}
     auto_choices: dict = field(default_factory=dict)
     budget_bits: Optional[float] = None
+    # wall-clock spent compressing (the registry's register-to-first-token
+    # accounting needs the ingest cost split from the table-write cost)
+    wall_s: float = 0.0
 
     @property
     def ratio_paper(self) -> float:
@@ -160,7 +164,9 @@ def _resolve(spec, codec: Optional[str]) -> tuple[Any, DeltaCodec]:
 def compress(base_params: Any, ft_params: Any, spec: Any = None,
              rng: Optional[jax.Array] = None, *,
              codec: Optional[str] = None,
-             budget_bits: Optional[float] = None) -> tuple[Any, CompressionReport]:
+             budget_bits: Optional[float] = None,
+             progress: Optional[Callable[[str, Optional[str]], None]] = None,
+             ) -> tuple[Any, CompressionReport]:
     """Compress every eligible delta leaf; returns (deltas tree, report).
 
     ``spec`` picks the codec by its class (default: ``DeltaDQSpec()``,
@@ -168,9 +174,18 @@ def compress(base_params: Any, ft_params: Any, spec: Any = None,
     with the codec's default spec; ``codec="auto"`` runs the per-leaf
     auto-picker and requires ``budget_bits`` (stored bits per weight
     element, indices included).
+
+    ``progress(path, codec_name_or_None)`` is called once per leaf as it
+    resolves (None = left dense) — the serve registry's ingest worker
+    reports live compression progress through it. The report's ``wall_s``
+    records the wall-clock the whole tree took.
     """
+    t0 = time.perf_counter()
     if codec == "auto":
-        return _compress_auto(base_params, ft_params, spec, rng, budget_bits)
+        deltas, report = _compress_auto(base_params, ft_params, spec, rng,
+                                        budget_bits, progress)
+        report.wall_s = time.perf_counter() - t0
+        return deltas, report
     if budget_bits is not None:
         raise ValueError("budget_bits only applies to codec='auto'")
     spec, c = _resolve(spec, codec)
@@ -182,12 +197,17 @@ def compress(base_params: Any, ft_params: Any, spec: Any = None,
         if not is_compressible(path, b):
             report.n_dense += 1
             report.skipped_paths.append(path)
+            if progress is not None:
+                progress(path, None)
             return None
         d = c.compress_leaf(_leaf_rng(rng, path), b, f, spec)
         report.add_leaf(path, c, d)
+        if progress is not None:
+            progress(path, c.name)
         return d
 
     deltas = map_with_paths(fn, base_params, ft_params)
+    report.wall_s = time.perf_counter() - t0
     return deltas, report
 
 
@@ -204,8 +224,8 @@ def auto_candidates(spec: Any = None) -> list[tuple[DeltaCodec, Any]]:
     return out
 
 
-def _compress_auto(base_params, ft_params, spec, rng,
-                   budget_bits) -> tuple[Any, CompressionReport]:
+def _compress_auto(base_params, ft_params, spec, rng, budget_bits,
+                   progress=None) -> tuple[Any, CompressionReport]:
     """Per-leaf codec auto-pick: cheapest codec meeting the size budget
     at the lowest measured reconstruction error.
 
@@ -225,6 +245,8 @@ def _compress_auto(base_params, ft_params, spec, rng,
         if not is_compressible(path, b):
             report.n_dense += 1
             report.skipped_paths.append(path)
+            if progress is not None:
+                progress(path, None)
             return None
         leaf_rng = _leaf_rng(rng, path)
         delta = np.asarray(f, np.float32) - np.asarray(b, np.float32)
@@ -246,6 +268,8 @@ def _compress_auto(base_params, ft_params, spec, rng,
         report.auto_choices[path] = {
             "codec": c.name, "bits_per_element": bpe, "rel_error": err,
             "budget_met": bool(bpe <= budget_bits)}
+        if progress is not None:
+            progress(path, c.name)
         return d
 
     deltas = map_with_paths(fn, base_params, ft_params)

@@ -77,6 +77,120 @@ def _tenant_specs(args) -> list:
     return [args.codec] * args.tenants        # codec-name strings
 
 
+def run_lifecycle(args, cfg, base, rng):
+    """Online-lifecycle drill: the fleet registers INTO a running engine.
+
+    tenant0 is compressed and registered up front and starts serving;
+    tenants 1..N-1 then arrive as raw checkpoints mid-traffic and are
+    compressed + hot-registered by the DeltaRegistry while tenant0's
+    sequences keep decoding. Afterwards tenant0 rolls out a v2 (new
+    requests only) and tenant1 is retired. The whole drill must not
+    retrace the decode step. With ``--check-identity`` every request is
+    also gated token-identical against engines built with the same
+    tenant set up front — registration time must never change tokens.
+    """
+    from repro.serve import DeltaRegistry, VirtualClock
+
+    spec = RATIO_SPECS[args.ratio]
+    n = args.tenants
+
+    def ft_of(seed):
+        return jax.tree.map(
+            lambda p: p + 0.02 * jax.random.normal(
+                jax.random.fold_in(rng, seed), p.shape,
+                jnp.float32).astype(p.dtype)
+            if p.ndim >= 2 else p, base)
+
+    fts = [ft_of(7 + t) for t in range(n)]      # v1 fleet
+    ft_v2 = ft_of(777)                          # tenant0's rollout
+    stream = []
+    for i in range(args.requests):
+        L = 4 + (i % 3) * 4
+        prompt = np.asarray(jax.random.randint(
+            jax.random.fold_in(rng, 100 + i), (L,), 0, cfg.vocab))
+        stream.append((f"tenant{i % n}", prompt))
+
+    # +1 row so the rollout lands without evicting anyone
+    eng = ContinuousEngine(cfg, base, n_slots=args.slots,
+                           max_seq=args.max_seq, tenant_capacity=n + 1,
+                           clock=VirtualClock(tick=1e-3))
+    reg = DeltaRegistry(eng, base, spec=spec, codec=None)
+
+    reg.ingest("tenant0", fts[0]); reg.pump()
+    phase_a = [(i, reg.submit(t, p, max_new_tokens=args.max_new))
+               for i, (t, p) in enumerate(stream) if t == "tenant0"]
+    for _ in range(2):
+        eng.step(eng._now())            # tenant0 genuinely in flight
+    compiles = eng._decode._cache_size()
+    for t in range(1, n):
+        name = f"tenant{t}"
+        reg.ingest(name, fts[t]); reg.pump()
+        rec = reg._records[name]
+        print(f"hot-registered {name}: compress {rec.compress_s:.2f}s, "
+              f"register {1e3 * rec.register_s:.1f}ms", flush=True)
+        phase_a += [(i, reg.submit(tn, p, max_new_tokens=args.max_new))
+                    for i, (tn, p) in enumerate(stream) if tn == name]
+        eng.step(eng._now())
+    eng.run()
+    assert all(r.done for _, r in phase_a)
+
+    # rollout: tenant0 v2 serves NEW requests only; then retire tenant1
+    reg.ingest("tenant0", ft_v2); reg.pump()
+    phase_b = [(i, eng.submit("tenant0", p, max_new_tokens=args.max_new))
+               for i, (t, p) in enumerate(stream) if t == "tenant0"][:2]
+    eng.run()
+    assert all(r.done for _, r in phase_b)
+    if n > 1:
+        eng.unregister_tenant("tenant1")
+
+    recompiles = eng._decode._cache_size() - compiles
+    rep = eng.metrics.report()
+    print(f"lifecycle events: {rep['tenant_lifecycle']}")
+    print(f"decode recompiles across register/rollout/retire: {recompiles}")
+    if recompiles:
+        raise SystemExit("hot lifecycle retraced the decode step")
+
+    if args.check_identity:
+        # registration time must not change tokens: reference engines
+        # get the SAME tenant versions up front and serve the same
+        # prompts — compare per-request
+        def ref_engine(deltas_by_name):
+            e = ContinuousEngine(cfg, base, n_slots=args.slots,
+                                 max_seq=args.max_seq,
+                                 tenant_capacity=n + 1,
+                                 clock=VirtualClock(tick=1e-3))
+            for name, d in deltas_by_name.items():
+                e.register_tenant(name, d)
+            return e
+
+        v1 = {f"tenant{t}": compress(base, fts[t], spec)[0]
+              for t in range(n)}
+        ref = ref_engine(v1)
+        ref_a = [(i, ref.submit(stream[i][0], stream[i][1],
+                                max_new_tokens=args.max_new))
+                 for i, _ in phase_a]
+        ref.run()
+        ref2 = ref_engine({"tenant0": compress(base, ft_v2, spec)[0]})
+        ref_b = [(i, ref2.submit("tenant0", stream[i][1],
+                                 max_new_tokens=args.max_new))
+                 for i, _ in phase_b]
+        ref2.run()
+        bad = [r.rid for (_, r), (_, s) in zip(phase_a + phase_b,
+                                               ref_a + ref_b)
+               if not np.array_equal(r.output(), s.output())]
+        if bad:
+            raise SystemExit(f"lifecycle token identity FAILED for "
+                             f"requests {bad}")
+        print(f"token identity vs up-front engines: OK "
+              f"({len(phase_a)} + {len(phase_b)} requests)", flush=True)
+
+    if args.json:
+        print(json.dumps(rep, indent=2))
+    else:
+        print(f"served {len(phase_a) + len(phase_b)} requests / "
+              f"{rep['total_tokens']} tokens across the lifecycle drill")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
@@ -94,6 +208,14 @@ def main():
                          "engine, two codec groups)")
     ap.add_argument("--budget-bits", type=float, default=None,
                     help="per-element bit budget for --codec auto")
+    ap.add_argument("--lifecycle", action="store_true",
+                    help="online-lifecycle drill: tenant0 serves while "
+                         "the rest of the fleet is compressed and "
+                         "hot-registered mid-traffic, then a tenant0 "
+                         "version rollout and a tenant1 retirement — "
+                         "fails on any decode-step recompile; combine "
+                         "with --check-identity to gate tokens against "
+                         "all-up-front engines")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
@@ -179,6 +301,12 @@ def main():
                          "pools mirror the mesh data axis)")
     rng = jax.random.PRNGKey(0)
     base = lm.init_params(cfg, rng)
+    if args.lifecycle:
+        if mesh is not None:
+            raise SystemExit("--lifecycle runs single-device (the drill "
+                             "measures lifecycle, not sharding)")
+        run_lifecycle(args, cfg, base, rng)
+        return
     tenants = synth_tenants(cfg, base, args.tenants, _tenant_specs(args),
                             rng, budget_bits=args.budget_bits)
 

@@ -106,7 +106,19 @@ class DeltaStore:
         self._tenants: dict[str, Tenant] = {}
         self.version = 0
 
-    def register(self, name: str, deltas: Any, report=None) -> Tenant:
+    def register(self, name: str, deltas: Any, report=None, *,
+                 replace: bool = False) -> Tenant:
+        if name in self._tenants and not replace:
+            # a silent same-name replace keeps the dict insertion order —
+            # so the engine's row-shift guard passes — while live
+            # sequences of this tenant switch deltas mid-sequence.
+            # Callers that really mean "new version" must say so
+            # (ContinuousEngine.register_tenant does, after checking the
+            # tenant has no in-flight sequences / via the table rollout).
+            raise ValueError(
+                f"tenant {name!r} is already registered; pass replace=True "
+                "(or use ContinuousEngine.register_tenant, which refuses "
+                "only while the tenant has in-flight sequences)")
         t = Tenant(name, deltas, report)
         self._tenants[name] = t
         self.version += 1
@@ -115,6 +127,15 @@ class DeltaStore:
     def unregister(self, name: str) -> None:
         self._tenants.pop(name, None)
         self.version += 1
+
+    def snapshot(self) -> tuple:
+        """Cheap copy of the registry state (mapping + version cursor),
+        so engine mutations can roll back to exactly this state when a
+        refresh fails downstream."""
+        return (dict(self._tenants), self.version)
+
+    def restore(self, snap: tuple) -> None:
+        self._tenants, self.version = dict(snap[0]), snap[1]
 
     def get(self, name: str) -> Tenant:
         return self._tenants[name]
@@ -248,6 +269,29 @@ class DeltaResidency:
             res_map[row] = slot
         return res_map
 
+    def invalidate(self, rows) -> None:
+        """Drop the pre-decoded values of ``rows`` (their packed source
+        was rewritten — a tenant-table rollout/retire reused the row);
+        the freed residency slots go back to the promotion free list.
+        Row 0 stays pinned: the zero delta's values are always zeros."""
+        if not self.enabled:
+            return
+        for r in rows:
+            r = int(r)
+            if r == 0:
+                continue
+            slot = self._slot_of.pop(r, None)
+            if slot is not None:
+                self._free.append(slot)
+            if r in self._lru:
+                self._lru.remove(r)
+
+    def retarget(self, stacked: Any) -> None:
+        """Point promotions at a rewritten stacked tree. Shapes must be
+        unchanged (the tenant table guarantees this), so the promote jit
+        does not re-trace."""
+        self._stacked = stacked
+
     def reset_counters(self) -> None:
         """Zero the hit/miss/fallback counters; resident rows stay warm."""
         self.hits = self.misses = self.fallback_steps = 0
@@ -300,6 +344,133 @@ class _CodecGroup:
     lut: np.ndarray                   # int32 [n_global_rows]
     names: List[str]
     codecs: tuple
+
+
+# ---------------------------------------------------------------------------
+# Static tenant table: pre-allocated stack rows for hot registration
+# ---------------------------------------------------------------------------
+class TenantTable:
+    """Pre-allocated tenant-stacked envelope with free rows — the slot
+    table's pattern applied to tenants.
+
+    The dynamic path re-stacks the whole tenant dimension on every
+    register/unregister, so the stacked tree's leading dim (a jit shape)
+    changes and the decode step re-traces. The table instead allocates
+    ``capacity + 1`` rows up front (row 0 = the zero delta, as in every
+    stack) sized from the FIRST tenant's runtime tree, and lifecycle
+    events become row writes:
+
+    * **register** fills a free row via one jitted donated per-leaf row
+      write (the ``DeltaResidency`` promote / ``SlotKVCache`` insert
+      pattern) — array values change, shapes never do, so the decode jit
+      signature is constant and hot registration triggers ZERO decode
+      recompiles;
+    * **retire** tombstones the row (rewrites it with the zero delta, so
+      a stale dispatch of that row decodes to an exact 0.0) and returns
+      it to the free list — other tenants' rows never shift;
+    * **rollout** writes the new version into a *new* row and the engine
+      flips the name→row mapping, so in-flight sequences keep decoding
+      against the old row until they drain (new requests only).
+
+    Every tenant must match the template's tree structure AND stack
+    signature (``check_compatible``) — the same constraint one
+    ``_CodecGroup`` enforces; heterogeneous-codec fleets need the
+    dynamic multi-group path.
+
+    Under a mesh the table shards exactly like a dynamic stack
+    (``delta_shardings(shard_output=True)`` or replicated) and the row
+    write pins ``out_shardings`` so hot registration never drifts the
+    layout.
+    """
+
+    def __init__(self, template: Any, capacity: int, *, mesh=None,
+                 shard_deltas: str = "auto"):
+        if capacity < 1:
+            raise ValueError(f"tenant_capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self.signature = _stack_signature(template)
+        self.structure = jax.tree.structure(template, is_leaf=_is_pd)
+        self.zero = zero_delta_like(template)
+        n = self.capacity + 1
+
+        def alloc(d):
+            return PackedDelta(
+                jnp.zeros((n, *d.idx.shape), d.idx.dtype),
+                jnp.zeros((n, *d.codes.shape), d.codes.dtype),
+                jnp.zeros((n, *jnp.shape(d.scale)), jnp.float32),
+                jnp.zeros((n, *jnp.shape(d.zero)), jnp.int32),
+                d.h_in, d.h_out, d.h_g, d.keep, d.alpha, d.k_bits, d.m,
+                d.codec)
+
+        self.stacked = jax.tree.map(alloc, template, is_leaf=_is_pd)
+        jit_kw = {}
+        if mesh is not None:
+            from repro.launch import mesh as mesh_lib
+            if shard_deltas == "auto":
+                sh = mesh_lib.delta_shardings(self.stacked, mesh,
+                                              shard_output=True)
+            else:
+                from jax.sharding import NamedSharding, PartitionSpec
+                repl = NamedSharding(mesh, PartitionSpec())
+                sh = jax.tree.map(lambda _: repl, self.stacked)
+            self.stacked = mesh_lib.shard_tree(self.stacked, sh)
+            jit_kw["out_shardings"] = sh
+
+        def _write(stacked, tree, row):
+            return jax.tree.map(
+                lambda t, d: PackedDelta(
+                    t.idx.at[row].set(d.idx),
+                    t.codes.at[row].set(d.codes),
+                    t.scale.at[row].set(jnp.asarray(d.scale, jnp.float32)),
+                    t.zero.at[row].set(jnp.asarray(d.zero, jnp.int32)),
+                    t.h_in, t.h_out, t.h_g, t.keep, t.alpha, t.k_bits,
+                    t.m, t.codec),
+                stacked, tree, is_leaf=_is_pd)
+
+        # donate the table: registration is an in-place row write, not a
+        # copy of every registered tenant's bytes
+        self._write_jit = jax.jit(_write, donate_argnums=0, **jit_kw)
+        self._free: List[int] = list(range(1, n))
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def check_compatible(self, tree: Any) -> None:
+        """Raise ValueError unless ``tree`` can fill a row (called BEFORE
+        any engine state mutates, so a rejected tenant is a no-op)."""
+        if jax.tree.structure(tree, is_leaf=_is_pd) != self.structure:
+            raise ValueError(
+                "tenant delta tree structure does not match the tenant "
+                "table template; cannot hot-register")
+        if _stack_signature(tree) != self.signature:
+            raise ValueError(
+                "tenant packing meta (codec/shape signature) does not "
+                "match the tenant table template; heterogeneous-codec "
+                "fleets need the dynamic (tenant_capacity=None) engine")
+
+    def alloc(self) -> int:
+        """Claim the lowest free row; ValueError when the table is full."""
+        if not self._free:
+            raise ValueError(
+                f"tenant table full ({self.capacity} rows); retire a "
+                "tenant or raise tenant_capacity")
+        return self._free.pop(0)
+
+    def free(self, row: int) -> None:
+        if row in self._free or not 1 <= row <= self.capacity:
+            raise ValueError(f"bad tenant-table row free: {row}")
+        self._free.append(row)
+        self._free.sort()
+
+    def write(self, row: int, tree: Any) -> None:
+        """Fill ``row`` from a runtime delta tree (one jitted row write)."""
+        self.stacked = self._write_jit(self.stacked, tree, jnp.int32(row))
+
+    def clear(self, row: int) -> None:
+        """Tombstone ``row``: rewrite it with the zero delta (same jit
+        shape as ``write``, so retirement adds no compile)."""
+        self.write(row, self.zero)
 
 
 # ---------------------------------------------------------------------------
@@ -380,6 +551,7 @@ class ContinuousEngine:
                  shard_deltas: str = "auto",
                  admission="occupancy",
                  residency_budget_bytes: Optional[int] = None,
+                 tenant_capacity: Optional[int] = None,
                  chunked_prefill: bool = False, chunk_size: int = 16,
                  chunk_share: float = 1.0,
                  trace=None, slo=None, telemetry=None):
@@ -486,6 +658,23 @@ class ContinuousEngine:
         # segments dispatch — the per-row path has no values formulation
         self.residency_budget_bytes = residency_budget_bytes
         self.residency: Optional[DeltaResidency] = None
+        # tenant_capacity != None switches lifecycle to TABLE mode: a
+        # static pre-allocated tenant-table envelope (built lazily from
+        # the first tenant's tree) whose rows are filled/tombstoned in
+        # place, so register/rollout/retire never re-stack and never
+        # change a decode jit shape. None = the dynamic re-stacking path.
+        if tenant_capacity is not None:
+            if int(tenant_capacity) < 1:
+                raise ValueError(
+                    f"tenant_capacity must be >= 1, got {tenant_capacity}")
+            if len(self.store.names()) > int(tenant_capacity):
+                raise ValueError(
+                    f"store already holds {len(self.store.names())} tenants "
+                    f"> tenant_capacity={tenant_capacity}")
+        self.tenant_capacity = (None if tenant_capacity is None
+                                else int(tenant_capacity))
+        self._table: Optional[TenantTable] = None
+        self._retiring: set = set()      # rolled-out rows awaiting drain
 
         # host mirrors of per-slot decode state (row 0 = zero delta / base)
         self._tok = np.zeros(n_slots, np.int32)
@@ -560,39 +749,222 @@ class ContinuousEngine:
         self._combined = jax.jit(_cstep, donate_argnums=(1,), **ckw)
         self.prefill_shapes: set = set()
 
+        # table mode over a pre-populated store: seed the table with the
+        # existing tenants (registration order), exactly as if each had
+        # been hot-registered — the identity contract between "all
+        # tenants up front" and "registered live" starts here
+        if self.tenant_capacity is not None and self.store.names():
+            for t in self.store.ordered():
+                self._table_admit(t.name, t.deltas)
+            self._store_version = self.store.version
+
     # -- tenants ------------------------------------------------------------
     def register_tenant(self, name: str, deltas: Any, report=None) -> Tenant:
-        """Register a tenant, validating slot-dispatch compatibility NOW.
+        """Register (or roll out a new version of) a tenant.
 
         ``deltas`` may be any codec's compressed tree (BitDelta leaves,
         low-rank residual leaves, native PackedDelta); it is lowered to
         the PackedDelta runtime layout here, once, so every downstream
         consumer (prefill, decode, residency) sees one format. A tenant
         whose tree structure cannot join the engine must fail here, not
-        mid-run inside a prefill (which would leak the claimed slot).
+        mid-run inside a prefill (which would leak the claimed slot) —
+        and a rejected registration leaves engine state untouched.
+
+        With ``tenant_capacity=`` (table mode) this is HOT: the new
+        tenant fills a pre-allocated table row in place, so a running
+        engine picks it up with zero decode-step recompiles; re-register
+        of an existing name is the rollout path — the new version lands
+        in a fresh row and only NEW requests see it, in-flight sequences
+        drain against the old row. In dynamic mode a same-name
+        re-register is refused while the tenant has in-flight sequences
+        (they would silently switch deltas mid-sequence).
         """
-        t = self.store.register(name, runtime_delta_tree(deltas), report)
+        rt = runtime_delta_tree(deltas)
+        if self.tenant_capacity is not None:
+            rollout = name in self._rows
+            old = self._rows.get(name)
+            row, _ = self._table_admit(name, rt)     # raises pre-mutation
+            t = self.store.register(name, rt, report, replace=rollout)
+            self._store_version = self.store.version
+            if self.mesh is not None:
+                from repro.launch.mesh import replicate
+                t.deltas = replicate(t.deltas, self.mesh)
+            if rollout:
+                self.bus.emit("tenant_rollout", self._now(), tenant=name,
+                              row=row, old_row=old,
+                              retiring=len(self._retiring))
+            else:
+                self.bus.emit("tenant_register", self._now(), tenant=name,
+                              row=row, free_rows=self._table.n_free)
+            return t
+        replace = name in self.store.names()
+        if replace and self._tenant_in_flight(name):
+            raise RuntimeError(
+                f"tenant {name!r} has in-flight sequences; re-registering "
+                "would switch their deltas mid-sequence — drain first, or "
+                "serve with tenant_capacity= for hot version rollout")
+        snap = self.store.snapshot()
+        t = self.store.register(name, rt, report, replace=replace)
         try:
             self._refresh_stacked()
-        except ValueError:
-            self.store.unregister(name)
+        except (ValueError, RuntimeError):
+            self.store.restore(snap)
             raise
         if self.mesh is not None:
             from repro.launch.mesh import replicate
             t.deltas = replicate(t.deltas, self.mesh)
+        self.bus.emit("tenant_rollout" if replace else "tenant_register",
+                      self._now(), tenant=name,
+                      row=self._rows.get(name), old_row=None)
         return t
 
+    def unregister_tenant(self, name: str) -> None:
+        """Retire a tenant.
+
+        Table mode tombstones its row in place (the row is rewritten
+        with the zero delta and returned to the free list — no other
+        tenant's row shifts, no recompile). Dynamic mode re-stacks the
+        remaining tenants. Both refuse while the tenant has in-flight
+        sequences or queued requests, and a refused retire leaves engine
+        state untouched.
+        """
+        self.store.get(name)             # KeyError early for unknown names
+        if self._tenant_in_flight(name):
+            raise RuntimeError(
+                f"tenant {name!r} has in-flight sequences; drain before "
+                "retiring")
+        if any(r.tenant == name for r in self.queue.pending()):
+            raise RuntimeError(
+                f"tenant {name!r} has queued requests; drain before "
+                "retiring")
+        if self.tenant_capacity is not None:
+            row = self._rows.pop(name)
+            self.store.unregister(name)
+            self._store_version = self.store.version
+            self._table.clear(row)
+            self._table.free(row)
+            if self.residency is not None:
+                self.residency.invalidate([row])
+            self._sync_table_group()
+            self.bus.emit("tenant_retire", self._now(), tenant=name,
+                          row=row, free_rows=self._table.n_free)
+            return
+        snap = self.store.snapshot()
+        self.store.unregister(name)
+        try:
+            self._refresh_stacked()
+        except (ValueError, RuntimeError):
+            self.store.restore(snap)
+            raise
+        self.bus.emit("tenant_retire", self._now(), tenant=name, row=None)
+
+    def _tenant_in_flight(self, name: str) -> bool:
+        return any(self.sched.slots[s].request.tenant == name
+                   for s in self.sched.active_slots())
+
+    # -- tenant table (hot lifecycle) ---------------------------------------
+    def _table_admit(self, name: str, rt: Any) -> tuple:
+        """Fill a tenant-table row for ``name`` (no store writes, no
+        events — both seeding and hot registration route here). Returns
+        ``(row, old_row)``. Everything fallible happens before the first
+        mutation, so a rejected tenant leaves the engine untouched."""
+        moe = dget(rt, "moe")
+        if moe is not None and any(
+                isinstance(dget(moe, k), PackedDelta)
+                for k in ("wi", "wg", "wo")):
+            raise ValueError(
+                "slot dispatch cannot apply deltas at MoE expert "
+                "sites; serve MoE tenants via per-tenant grouping")
+        if self._table is None:
+            # first tenant fixes the template: envelope built once, here
+            table = TenantTable(rt, self.tenant_capacity, mesh=self.mesh,
+                                shard_deltas=self.shard_deltas)
+            zero = table.zero
+            if self.mesh is not None:
+                from repro.launch import mesh as mesh_lib
+                zero = mesh_lib.replicate(zero, self.mesh)
+            self._table = table
+            self._zero_tree = zero
+            # ONE group with an identity LUT for the table's whole life:
+            # the decode jit signature (len(_groups), shapes) is fixed at
+            # capacity, so later registrations can't change it
+            lut = np.arange(self.tenant_capacity + 1, dtype=np.int32)
+            codecs = tuple(sorted({sig[6] for sig in table.signature}))
+            self._groups = [_CodecGroup(stacked=table.stacked, lut=lut,
+                                        names=[], codecs=codecs)]
+            self._stacked = table.stacked
+            if self.residency_budget_bytes \
+                    and self.slot_dispatch == "segments":
+                self.residency = DeltaResidency(
+                    self._stacked, self.residency_budget_bytes,
+                    mesh=self.mesh)
+        else:
+            self._table.check_compatible(rt)
+        self._reclaim_retired()
+        row = self._table.alloc()        # ValueError when full, pre-mutation
+        old = self._rows.get(name)
+        self._table.write(row, rt)
+        self._rows[name] = row
+        if old is not None:
+            # rollout: in-flight sequences keep decoding the old row
+            # until they drain; tombstone it now if nothing references it
+            live = {int(self.sched.slots[s].tenant_row)
+                    for s in self.sched.active_slots()}
+            if old in live:
+                self._retiring.add(old)
+            else:
+                self._table.clear(old)
+                self._table.free(old)
+                if self.residency is not None:
+                    self.residency.invalidate([old])
+        self._sync_table_group()
+        return row, old
+
+    def _sync_table_group(self) -> None:
+        """Re-point dispatch at the table's current arrays (row writes
+        return fresh buffers) — bookkeeping only, shapes never change."""
+        g = self._groups[0]
+        g.stacked = self._table.stacked
+        g.names = [n for n, _ in
+                   sorted(self._rows.items(), key=lambda kv: kv[1])]
+        self._stacked = self._table.stacked
+        if self.residency is not None:
+            self.residency.retarget(self._stacked)
+
+    def _reclaim_retired(self) -> None:
+        """Tombstone rolled-out rows once their last in-flight sequence
+        drains (lazy: checked at request finish and before row alloc)."""
+        if not self._retiring:
+            return
+        live = {int(self.sched.slots[s].tenant_row)
+                for s in self.sched.active_slots()}
+        done = sorted(self._retiring - live)
+        if not done:
+            return
+        for row in done:
+            self._table.clear(row)
+            self._table.free(row)
+            self._retiring.discard(row)
+            if self.residency is not None:
+                self.residency.invalidate([row])
+        self._sync_table_group()
+
     def _refresh_stacked(self) -> None:
+        if self.tenant_capacity is not None:
+            return   # table mode: dispatch state is maintained per row write
         if self._store_version == self.store.version:
             return
         tenants = self.store.ordered()
-        self.residency = None            # stack rows changed: rebuild below
-        self._groups = []
-        if not tenants:
-            self._stacked = None
-            self._zero_tree = None
-            self._rows = {}
-        else:
+        # Stage EVERYTHING into locals, validate, then commit: a failed
+        # register/unregister must leave the engine exactly as it was
+        # (the old code tore down residency and rebuilt _groups/_rows
+        # before the in-flight guard could fire, leaving a half-refreshed
+        # engine behind the RuntimeError).
+        new_groups: List[_CodecGroup] = []
+        new_stacked = None
+        new_zero = None
+        new_rows: dict[str, int] = {}
+        if tenants:
             ref_struct = jax.tree.structure(tenants[0].deltas, is_leaf=_is_pd)
             for t in tenants:
                 moe = dget(t.deltas, "moe")
@@ -609,8 +981,8 @@ class ContinuousEngine:
                     raise ValueError(
                         "tenant delta trees differ in structure; "
                         "cannot stack for slot dispatch")
-            self._zero_tree = zero_delta_like(tenants[0].deltas)
-            self._rows = {t.name: i + 1 for i, t in enumerate(tenants)}
+            new_zero = zero_delta_like(tenants[0].deltas)
+            new_rows = {t.name: i + 1 for i, t in enumerate(tenants)}
             # partition tenants into stack-compatible groups (first-fit in
             # registration order, so group membership — and therefore each
             # group's local rows — never reorders under appends). Tenants
@@ -654,38 +1026,44 @@ class ContinuousEngine:
                         stacked_g = mesh_lib.replicate(stacked_g, self.mesh)
                 codecs = tuple(sorted(
                     {c for _, t in members for c in t.codecs()}))
-                self._groups.append(_CodecGroup(
+                new_groups.append(_CodecGroup(
                     stacked=stacked_g, lut=lut,
                     names=[t.name for _, t in members], codecs=codecs))
             # single group == the classic homogeneous engine: keep the
             # stacked tree on its historical attribute (residency and
             # introspection read it); mixed-codec engines expose _groups
-            self._stacked = self._groups[0].stacked \
-                if len(self._groups) == 1 else None
+            new_stacked = new_groups[0].stacked \
+                if len(new_groups) == 1 else None
             if self.mesh is not None:
                 from repro.launch import mesh as mesh_lib
-                self._zero_tree = mesh_lib.replicate(self._zero_tree,
-                                                     self.mesh)
-            if self.residency_budget_bytes \
-                    and self.slot_dispatch == "segments" \
-                    and len(self._groups) == 1:
-                # the residency tier keys its value buffers to ONE stack's
-                # rows; mixed-codec engines serve packed (still correct)
-                self.residency = DeltaResidency(
-                    self._stacked, self.residency_budget_bytes,
-                    mesh=self.mesh)
+                new_zero = mesh_lib.replicate(new_zero, self.mesh)
         # registration is append-only so rows never shift — but a live
         # unregister would remap rows under in-flight sequences, silently
-        # decoding them with another tenant's delta. Refuse instead.
+        # decoding them with another tenant's delta. Refuse instead —
+        # BEFORE committing (and before allocating residency buffers).
         for slot in self.sched.active_slots():
             state = self.sched.slots[slot]
-            want = self._rows.get(state.request.tenant, 0) \
+            want = new_rows.get(state.request.tenant, 0) \
                 if state.request.tenant else 0
             if want != state.tenant_row:
                 raise RuntimeError(
                     f"tenant stack rows shifted under in-flight request "
                     f"{state.request.rid} (tenant {state.request.tenant!r}); "
                     "drain the engine before unregistering tenants")
+        new_res = None
+        if tenants and self.residency_budget_bytes \
+                and self.slot_dispatch == "segments" \
+                and len(new_groups) == 1:
+            # the residency tier keys its value buffers to ONE stack's
+            # rows; mixed-codec engines serve packed (still correct)
+            new_res = DeltaResidency(
+                new_stacked, self.residency_budget_bytes, mesh=self.mesh)
+        # commit atomically: nothing above mutated engine state
+        self.residency = new_res
+        self._groups = new_groups
+        self._stacked = new_stacked
+        self._zero_tree = new_zero
+        self._rows = new_rows
         self._store_version = self.store.version
 
     # -- request API --------------------------------------------------------
@@ -797,6 +1175,9 @@ class ContinuousEngine:
         # park the freed slot on tenant row 0 so stale rows don't inflate
         # the unique-tenant segment count of subsequent decode steps
         self._row[slot] = 0
+        if self._retiring:
+            # a rollout's old row may just have lost its last reference
+            self._reclaim_retired()
 
     # -- chunked prefill ----------------------------------------------------
     def _admit_chunked(self, slot: int, req: Request, now: float) -> None:

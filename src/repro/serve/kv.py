@@ -72,12 +72,20 @@ class SlotKVCache:
 
     # -- slot accounting ----------------------------------------------------
     def claim(self, slot: int) -> None:
-        """Mark a specific slot occupied (scheduler-chosen slot id)."""
-        assert slot in self._free, f"slot {slot} is not free"
+        """Mark a specific slot occupied (scheduler-chosen slot id).
+
+        ValueError (not assert): a double-claim means the scheduler's
+        slot table and this free list disagree — that must fail loudly
+        even under ``python -O``, or the next insert would overwrite a
+        live sequence's cache row.
+        """
+        if slot not in self._free:
+            raise ValueError(f"slot {slot} is not free")
         self._free.remove(slot)
 
     def release(self, slot: int) -> None:
-        assert slot not in self._free, f"slot {slot} double-freed"
+        if slot in self._free:
+            raise ValueError(f"slot {slot} double-freed")
         self._free.append(slot)
 
     @property

@@ -86,6 +86,9 @@ class Metrics:
         # decode steps per attributed dispatch path label
         self.decode_paths: Dict[str, int] = {}
         self.jit_traces = 0
+        # tenant lifecycle transitions (register/rollout/retire from the
+        # engine; ready/promote/evict from the registry), by event kind
+        self.lifecycle: Dict[str, int] = {}
         # inter-token latency: gap between consecutive "token" events of
         # one request, pooled across requests. The observable chunked
         # prefill's SLO knob protects — a prefill that preempts decode
@@ -133,6 +136,9 @@ class Metrics:
             self.stop(ev.t)
         elif kind == "jit_trace":
             self.jit_traces += 1
+        elif kind in ("tenant_register", "tenant_rollout", "tenant_retire",
+                      "tenant_ready", "tenant_promote", "tenant_evict"):
+            self.lifecycle[kind] = self.lifecycle.get(kind, 0) + 1
 
     # -- recording hooks ----------------------------------------------------
     def start(self, now: float) -> None:
@@ -272,5 +278,6 @@ class Metrics:
             "itl_p50": self.itls.percentile(50),
             "itl_p95": self.itls.percentile(95),
             "decode_paths": dict(sorted(self.decode_paths.items())) or None,
+            "tenant_lifecycle": dict(sorted(self.lifecycle.items())) or None,
             "tenants": {k: t.report(wall) for k, t in sorted(self.tenants.items())},
         }

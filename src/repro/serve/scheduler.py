@@ -39,6 +39,7 @@ Design points (serve/README.md has the full picture):
 """
 from __future__ import annotations
 
+import heapq
 import itertools
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional
@@ -96,10 +97,22 @@ class Request:
 
 
 class RequestQueue:
-    """Arrival-ordered queue with deadline-aware pop."""
+    """Arrival-ordered queue with deadline-aware pop.
+
+    Two heaps instead of the old linear best-scan + ``list.remove``
+    (which made draining n requests O(n^2) — measurable at
+    registry-scale queue depths): ``_future`` orders not-yet-arrived
+    requests by arrival, ``_ready`` orders arrived ones by the EDF key
+    ``(deadline-or-inf, arrival, rid)``. ``pop_ready`` migrates arrived
+    requests future->ready, then pops the heap head — the exact request
+    the old scan's ``min()`` picked, so pop order is unchanged (the EDF
+    property suite pins it). Each request is pushed/popped O(log n)
+    once per heap.
+    """
 
     def __init__(self):
-        self._waiting: List[Request] = []
+        self._future: List[tuple] = []    # (arrival, rid, Request)
+        self._ready: List[tuple] = []     # (deadline|inf, arrival, rid, Req)
         self._ids = itertools.count()
 
     def submit(self, tenant: Optional[str], prompt: np.ndarray, *,
@@ -110,28 +123,47 @@ class RequestQueue:
                       prompt=np.asarray(prompt, np.int32).reshape(-1),
                       max_new_tokens=max_new_tokens, stop_token=stop_token,
                       arrival=arrival, deadline=deadline, on_token=on_token)
-        self._waiting.append(req)
+        heapq.heappush(self._future, (req.arrival, req.rid, req))
         return req
 
+    def _migrate(self, now: float) -> None:
+        """Move every arrived request onto the EDF-keyed ready heap."""
+        while self._future and self._future[0][0] <= now:
+            _, rid, req = heapq.heappop(self._future)
+            heapq.heappush(self._ready, (
+                req.deadline if req.deadline is not None else float("inf"),
+                req.arrival, rid, req))
+
     def __len__(self) -> int:
-        return len(self._waiting)
+        return len(self._future) + len(self._ready)
 
     def ready(self, now: float) -> List[Request]:
-        return [r for r in self._waiting if r.arrival <= now]
+        """Arrived-but-unpopped requests, in submission (rid) order —
+        introspection only, never consulted by the pop path."""
+        out = [r for _, _, r in self._future if r.arrival <= now]
+        out += [r for _, _, _, r in self._ready]
+        return sorted(out, key=lambda r: r.rid)
+
+    def pending(self) -> List[Request]:
+        """ALL queued requests (arrived or not), in submission (rid)
+        order — lifecycle guards scan this before retiring a tenant."""
+        out = [r for _, _, r in self._future]
+        out += [r for _, _, _, r in self._ready]
+        return sorted(out, key=lambda r: r.rid)
 
     def next_arrival(self) -> Optional[float]:
-        return min((r.arrival for r in self._waiting), default=None)
+        if self._ready:
+            # already-arrived requests are waiting (e.g. on slots): the
+            # earliest pending arrival is theirs, not a future one's
+            return min(r.arrival for _, _, _, r in self._ready)
+        return self._future[0][0] if self._future else None
 
     def pop_ready(self, now: float) -> Optional[Request]:
         """Earliest deadline first among arrived requests; FIFO otherwise."""
-        ready = self.ready(now)
-        if not ready:
+        self._migrate(now)
+        if not self._ready:
             return None
-        best = min(ready, key=lambda r: (
-            r.deadline if r.deadline is not None else float("inf"),
-            r.arrival, r.rid))
-        self._waiting.remove(best)
-        return best
+        return heapq.heappop(self._ready)[3]
 
 
 # ---------------------------------------------------------------------------

@@ -297,6 +297,32 @@ class Tracer:
                           "notes": ev.attrs.get("notes"),
                       })
 
+    # -- tenant lifecycle handlers ------------------------------------------
+    # register/rollout/retire come from the engine; ready/promote/evict
+    # from the delta registry. All land as instants on the engine
+    # process's "lifecycle" track, so a rollout's timing reads directly
+    # against the decode steps it must not perturb.
+    def _on_lifecycle(self, ev: ServeEvent) -> None:
+        self._instant(ev.kind, self._PID_ENGINE, 1, ev.t, dict(ev.attrs))
+
+    def _on_tenant_register(self, ev: ServeEvent) -> None:
+        self._on_lifecycle(ev)
+
+    def _on_tenant_rollout(self, ev: ServeEvent) -> None:
+        self._on_lifecycle(ev)
+
+    def _on_tenant_retire(self, ev: ServeEvent) -> None:
+        self._on_lifecycle(ev)
+
+    def _on_tenant_ready(self, ev: ServeEvent) -> None:
+        self._on_lifecycle(ev)
+
+    def _on_tenant_promote(self, ev: ServeEvent) -> None:
+        self._on_lifecycle(ev)
+
+    def _on_tenant_evict(self, ev: ServeEvent) -> None:
+        self._on_lifecycle(ev)
+
     # -- export -------------------------------------------------------------
     def to_chrome_trace(self) -> dict:
         """Chrome "JSON object format" trace; events sorted by ts."""
@@ -307,6 +333,8 @@ class Tracer:
              "args": {"name": "engine"}},
             {"name": "thread_name", "ph": "M", "pid": self._PID_ENGINE,
              "tid": 0, "args": {"name": "decode"}},
+            {"name": "thread_name", "ph": "M", "pid": self._PID_ENGINE,
+             "tid": 1, "args": {"name": "lifecycle"}},
         ]
         events = sorted(self.events, key=lambda e: (e["ts"], e.get("tid", 0)))
         trace = {

@@ -1105,7 +1105,7 @@ def test_slot_kv_cache_shard_accounting(dense_setup):
     assert kv.shard_occupancy() == [0.5, 0.5]
     kv.release(2)
     assert kv.n_free_shard(1) == 2
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="double-freed"):
         kv.release(2)                          # double free still refused
     with pytest.raises(ValueError):
         SlotKVCache(cfg, 5, 16, data_shards=2)
