@@ -40,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_row, get_models
+from repro.analysis import CompileGuard
 from repro.configs import get_smoke_config
 from repro.core import DeltaDQSpec, compress
 from repro.launch.serve import synth_tenants
@@ -445,7 +446,9 @@ def tenant_lifecycle(n_tenants: int = 3, max_new: int = 8,
             for L in (4, 12)]
     eng.run()
     assert all(w.done for w in warm)
-    compiles_before = eng._decode._cache_size()
+    # post-warmup recompile count via CompileGuard — the same (single)
+    # implementation the lifecycle tests and launcher drill gate on
+    guard = CompileGuard(eng, max_new={"decode": 0})
 
     rs = np.random.RandomState(0)
     inflight = [eng.submit("tenant0",
@@ -477,7 +480,7 @@ def tenant_lifecycle(n_tenants: int = 3, max_new: int = 8,
     eng.unregister_tenant("tenant1")                 # drained: retire
     retire_s = time.perf_counter() - t0
 
-    recompiles = eng._decode._cache_size() - compiles_before
+    recompiles = guard.new_compiles("decode")
     out = {
         "n_tenants": n_tenants,
         "tenants": rows,

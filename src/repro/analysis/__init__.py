@@ -1,0 +1,38 @@
+"""Static analysis + runtime sanitizers for the repo's coded contracts.
+
+Two pieces:
+
+* :mod:`repro.analysis.lint` — ``deltalint``, an AST-based lint pass
+  (``python -m repro.analysis.lint src/repro``) whose rules encode the
+  identity/determinism invariants this codebase has fought for: no
+  dot-family reductions in the bit-identity correction paths, no
+  process-seeded randomness in compression, typed exceptions in runtime
+  paths, a closed event-name schema, recompile-risk jit patterns,
+  complete codec registrations, deterministic storage iteration, and
+  value-naming error messages. Pure stdlib: importing (and running) it
+  never pulls in jax, so the CI lint job finishes in seconds.
+
+* :mod:`repro.analysis.compile_guard` — :class:`CompileGuard`, the ONE
+  recompile-detection implementation: snapshots every jitted-entry
+  cache size on an engine, asserts declared budgets, and (attached to
+  the engine's event bus) can raise the moment a ``jit_trace`` retrace
+  event fires outside a declared warmup phase.
+"""
+from repro.analysis.compile_guard import (
+    CompileBudgetError, CompileGuard, count_recompiles)
+
+__all__ = [
+    "CompileBudgetError", "CompileGuard", "count_recompiles",
+    "Finding", "lint_paths", "lint_source",
+]
+
+_LINT_NAMES = ("Finding", "lint_paths", "lint_source", "RULES")
+
+
+def __getattr__(name):
+    # Lazy so `python -m repro.analysis.lint` doesn't import the lint
+    # module twice (package import + runpy execution -> RuntimeWarning).
+    if name in _LINT_NAMES:
+        from repro.analysis import lint
+        return getattr(lint, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

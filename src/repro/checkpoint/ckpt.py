@@ -112,7 +112,7 @@ class Checkpointer:
                 continue
             arr = data[k]
             if k in bit_dtypes:
-                import ml_dtypes  # bundled with jax
+                import ml_dtypes  # noqa: F401  (registers bf16 etc. with numpy)
                 arr = arr.view(np.dtype(bit_dtypes[k]))
             sh = flat_s.get(k)
             if sh is not None:

@@ -9,8 +9,8 @@ own Llama-2-class targets, and each config file also exposes a
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Optional, Sequence
+from dataclasses import dataclass
+from typing import Optional
 
 
 @dataclass(frozen=True)
@@ -93,8 +93,14 @@ class ArchConfig:
             object.__setattr__(self, "layer_kinds", tuple([kind] * self.n_layers))
         if not self.layer_windows:
             object.__setattr__(self, "layer_windows", tuple([0] * self.n_layers))
-        assert len(self.layer_kinds) == self.n_layers, self.name
-        assert len(self.layer_windows) == self.n_layers, self.name
+        if len(self.layer_kinds) != self.n_layers:
+            raise ValueError(
+                f"arch {self.name!r}: {len(self.layer_kinds)} layer_kinds "
+                f"for n_layers={self.n_layers}")
+        if len(self.layer_windows) != self.n_layers:
+            raise ValueError(
+                f"arch {self.name!r}: {len(self.layer_windows)} "
+                f"layer_windows for n_layers={self.n_layers}")
 
     # ---- derived ----
     @property

@@ -20,7 +20,6 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core import quant
 
 
 def magnitude(rng, delta: jnp.ndarray, *, alpha: float, **_) -> jnp.ndarray:

@@ -38,7 +38,6 @@ codec=<name>)`` and the per-leaf auto-picker pick it up automatically.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 from typing import Any, Optional
 
@@ -293,7 +292,10 @@ class DeltaDQCodec(DeltaCodec):
                 "scale": float(np.asarray(leaf.scale)),
                 "zero": int(np.asarray(leaf.zero))}
         if leaf.k_bits is None:
-            assert not leaf.stack_shape(), "storage layer operates per-matrix"
+            if leaf.stack_shape():
+                raise ValueError(
+                    "storage layer operates per-matrix; got stacked leaf "
+                    f"with stack_shape={leaf.stack_shape()}")
             parts = {"idx": np.asarray(leaf.idx),
                      "values": np.asarray(leaf.codes)}
             return parts, meta
@@ -404,7 +406,10 @@ class BitDeltaCodec(DeltaCodec):
         return {"value_bits": vb, "total_bits": vb + 32.0 * stack}
 
     def to_storage_parts(self, leaf: BitDeltaLeaf):
-        assert not leaf.stack_shape(), "storage layer operates per-matrix"
+        if leaf.stack_shape():
+            raise ValueError(
+                "storage layer operates per-matrix; got stacked leaf with "
+                f"stack_shape={leaf.stack_shape()}")
         parts = {"sign": np.asarray(leaf.sign)}
         meta = {"codec": self.name, "h_in": leaf.h_in, "h_out": leaf.h_out,
                 "scale": float(np.asarray(leaf.scale))}
@@ -506,7 +511,10 @@ class LowRankCodec(DeltaCodec):
         return {"value_bits": vb, "total_bits": vb + 64.0 * stack}
 
     def to_storage_parts(self, leaf: LowRankLeaf):
-        assert not leaf.stack_shape(), "storage layer operates per-matrix"
+        if leaf.stack_shape():
+            raise ValueError(
+                "storage layer operates per-matrix; got stacked leaf with "
+                f"stack_shape={leaf.stack_shape()}")
         parts = {"codes": np.asarray(leaf.codes),
                  "u": np.asarray(leaf.u), "v": np.asarray(leaf.v)}
         meta = {"codec": self.name, "h_in": leaf.h_in, "h_out": leaf.h_out,

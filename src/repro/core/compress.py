@@ -29,7 +29,6 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 # DeltaDQSpec/_pick_hg moved to codecs.py with the codec extraction; both

@@ -166,8 +166,14 @@ class StoragePart:
 
 def to_storage_parts(d: PackedDelta) -> list[StoragePart]:
     """Decompose a (non-stacked) PackedDelta into m paper-faithful parts."""
-    assert d.k_bits is not None, "separate quantization requires quantized codes"
-    assert not d.stack_shape(), "storage layer operates per-matrix"
+    if d.k_bits is None:
+        raise ValueError(
+            "separate quantization requires quantized codes; this "
+            "PackedDelta has k_bits=None (raw float values)")
+    if d.stack_shape():
+        raise ValueError(
+            "storage layer operates per-matrix; got stacked delta with "
+            f"stack_shape={d.stack_shape()}")
     q = np.asarray(quant.unpack_bits(d.codes, quant.pack_width(d.k_bits), d.keep,
                                      axis=d.codes.ndim - 2))
     idx = np.asarray(d.idx)
@@ -176,7 +182,6 @@ def to_storage_parts(d: PackedDelta) -> list[StoragePart]:
     pid = q // width
     low = (q - pid * width).astype(np.uint8)
     # order elements by (g, o) then k so group offsets are well defined
-    qf = q.transpose(0, 2, 1).reshape(G * O, K)
     pidf = pid.transpose(0, 2, 1).reshape(G * O, K)
     lowf = low.transpose(0, 2, 1).reshape(G * O, K)
     idxf = idx.transpose(0, 2, 1).reshape(G * O, K)

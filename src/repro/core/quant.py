@@ -35,7 +35,8 @@ def quantize(x: jnp.ndarray, k_bits: int, lead_dims: int = 0) -> tuple[jnp.ndarr
     tensors (per-layer / per-expert scales), matching the paper's per-tensor
     granularity applied to each weight matrix.
     """
-    assert 1 <= k_bits <= 8
+    if not 1 <= k_bits <= 8:
+        raise ValueError(f"k_bits={k_bits} must be in [1, 8]")
     red = tuple(range(lead_dims, x.ndim))
     lo = jnp.min(x, axis=red, keepdims=True).astype(jnp.float32)
     hi = jnp.max(x, axis=red, keepdims=True).astype(jnp.float32)
@@ -58,8 +59,11 @@ def dequantize(q: jnp.ndarray, qp: QuantParams) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 def part_id(q: jnp.ndarray, k_bits: int, m: int) -> jnp.ndarray:
     """Which of the m value-range parts each code belongs to (Eq. 10)."""
-    assert m >= 1 and (m & (m - 1)) == 0, "m must be a power of two"
-    assert m <= 2**k_bits
+    if m < 1 or (m & (m - 1)) != 0:
+        raise ValueError(f"m={m} must be a power of two >= 1")
+    if m > 2**k_bits:
+        raise ValueError(f"m={m} exceeds the code space of k_bits={k_bits} "
+                         f"({2**k_bits} codes)")
     width = (2**k_bits) // m
     return q // width
 
@@ -121,7 +125,9 @@ def packed_len(n: int, k_bits: int) -> int:
 
 def pack_bits(q: jnp.ndarray, k_bits: int, axis: int = 0) -> jnp.ndarray:
     """Pack k-bit codes into uint8 along ``axis`` (pads with zeros)."""
-    assert k_bits in (1, 2, 4, 8)
+    if k_bits not in (1, 2, 4, 8):
+        raise ValueError(f"k_bits={k_bits} must be one of (1, 2, 4, 8) "
+                         "to pack into whole uint8 lanes")
     per = 8 // k_bits
     q = jnp.moveaxis(q, axis, 0).astype(jnp.uint8)
     n = q.shape[0]
@@ -130,7 +136,8 @@ def pack_bits(q: jnp.ndarray, k_bits: int, axis: int = 0) -> jnp.ndarray:
         q = jnp.concatenate([q, jnp.zeros((pad, *q.shape[1:]), jnp.uint8)], axis=0)
     q = q.reshape(q.shape[0] // per, per, *q.shape[1:])
     shifts = (jnp.arange(per, dtype=jnp.uint8) * k_bits).reshape(1, per, *([1] * (q.ndim - 2)))
-    packed = jnp.bitwise_or.reduce(q << shifts, axis=1) if hasattr(jnp.bitwise_or, "reduce") else None
+    packed = (jnp.bitwise_or.reduce(q << shifts, axis=1)
+              if hasattr(jnp.bitwise_or, "reduce") else None)
     if packed is None:  # jnp ufuncs lack .reduce in some versions
         packed = jnp.zeros((q.shape[0], *q.shape[2:]), jnp.uint8)
         for i in range(per):
@@ -140,7 +147,9 @@ def pack_bits(q: jnp.ndarray, k_bits: int, axis: int = 0) -> jnp.ndarray:
 
 def unpack_bits(packed: jnp.ndarray, k_bits: int, n: int, axis: int = 0) -> jnp.ndarray:
     """Inverse of :func:`pack_bits`; returns int32 codes, trimmed to n."""
-    assert k_bits in (1, 2, 4, 8)
+    if k_bits not in (1, 2, 4, 8):
+        raise ValueError(f"k_bits={k_bits} must be one of (1, 2, 4, 8) "
+                         "to unpack from whole uint8 lanes")
     per = 8 // k_bits
     p = jnp.moveaxis(packed, axis, 0)
     mask = jnp.uint8(2**k_bits - 1)

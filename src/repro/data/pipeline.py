@@ -15,7 +15,7 @@ skipped/duplicated data after restore). Three sources:
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional
+from typing import Iterator
 
 import numpy as np
 
@@ -79,7 +79,10 @@ class SortTask:
         rng = np.random.default_rng(np.random.SeedSequence([self.seed, step, 7]))
         n = self.n_digits
         B, S = self.batch, self.seq_len
-        assert S >= 2 * n + 2
+        if S < 2 * n + 2:
+            raise ValueError(
+                f"seq_len={S} too short for n_digits={n} addition prompts "
+                f"(needs >= {2 * n + 2})")
         toks = np.full((B, S), PAD, np.int32)
         labels = np.full((B, S), PAD, np.int32)
         mask = np.zeros((B, S), np.float32)

@@ -22,8 +22,6 @@ from __future__ import annotations
 
 from typing import Any, Optional
 
-import jax
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.utils import map_with_paths
@@ -79,7 +77,10 @@ class ShardingRules:
     def spec_for(self, axes: tuple, shape: tuple, path: str = "?") -> P:
         """PartitionSpec for one leaf; records a fallback when a mapped
         logical axis exists but no mesh axis fits (divisibility/reuse)."""
-        assert len(axes) == len(shape), (path, axes, shape)
+        if len(axes) != len(shape):
+            raise ValueError(
+                f"leaf {path!r}: logical axes {axes} (rank {len(axes)}) do "
+                f"not match shape {shape} (rank {len(shape)})")
         used: set = set()
         entries = []
         fell_back = False

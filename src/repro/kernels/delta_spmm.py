@@ -129,7 +129,10 @@ def delta_spmm_kernel(x, idx, codes, scale, zero, *, h_g: int, keep: int,
     Kp = codes.shape[1]
     tb = min(tb, T)
     ob = min(ob, h_out)
-    assert T % tb == 0 and h_out % ob == 0, (T, tb, h_out, ob)
+    if T % tb or h_out % ob:
+        raise ValueError(
+            f"kernel tiles must divide extents: T={T} %% tb={tb} and "
+            f"h_out={h_out} %% ob={ob} must both be 0")
     grid = (T // tb, h_out // ob, G)
     return pl.pallas_call(
         functools.partial(_spmm_body, k_bits=k_bits, keep=keep, h_g=h_g, kc=kc),
@@ -178,7 +181,10 @@ def fused_base_delta_kernel(x, w, idx, codes, scale, zero, *, h_g: int, keep: in
     Kp = codes.shape[1]
     tb = min(tb, T)
     ob = min(ob, h_out)
-    assert T % tb == 0 and h_out % ob == 0
+    if T % tb or h_out % ob:
+        raise ValueError(
+            f"kernel tiles must divide extents: T={T} %% tb={tb} and "
+            f"h_out={h_out} %% ob={ob} must both be 0")
     grid = (T // tb, h_out // ob, G)
     return pl.pallas_call(
         functools.partial(_fused_body, k_bits=k_bits, keep=keep, h_g=h_g, kc=kc),
@@ -258,8 +264,14 @@ def delta_spmm_segments_kernel(x, idx, codes, scale, zero, seg_rows,
     S = seg_rows.shape[0]
     tb = min(tb, T)
     ob = min(ob, h_out)
-    assert T % tb == 0 and h_out % ob == 0, (T, tb, h_out, ob)
-    assert seg_offsets.shape[0] == S + 1, (seg_offsets.shape, S)
+    if T % tb or h_out % ob:
+        raise ValueError(
+            f"kernel tiles must divide extents: T={T} %% tb={tb} and "
+            f"h_out={h_out} %% ob={ob} must both be 0")
+    if seg_offsets.shape[0] != S + 1:
+        raise ValueError(
+            f"seg_offsets has {seg_offsets.shape[0]} entries for {S} "
+            f"segments (needs S+1={S + 1} fenceposts)")
     grid = (T // tb, h_out // ob, S, G)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -303,7 +315,8 @@ def dequant_kernel(idx, codes, scale, zero, *, h_g: int, keep: int,
     G = idx.shape[0]
     Kp = codes.shape[1]
     ob = min(ob, h_out)
-    assert h_out % ob == 0
+    if h_out % ob:
+        raise ValueError(f"ob={ob} must divide h_out={h_out}")
     grid = (G, h_out // ob)
     return pl.pallas_call(
         functools.partial(_dequant_body, k_bits=k_bits, keep=keep, h_g=h_g,

@@ -162,7 +162,10 @@ def delta_spmm_slots(x: jnp.ndarray, d: PackedDelta, *,
     if interpret is None:
         interpret = _INTERPRET
     B = x.shape[0]
-    assert d.stack_shape() == (B,), (d.stack_shape(), x.shape)
+    if d.stack_shape() != (B,):
+        raise ValueError(
+            f"stacked delta stack_shape={d.stack_shape()} must equal "
+            f"({B},) — one delta row per slot row of x {x.shape}")
     probe = d.index(0)
     if interpret or not kernel_supported(probe):
         _note("delta_spmm_slots", formulation="per-row-gather",

@@ -37,7 +37,7 @@ from repro.models import lm
 from repro.optim import adamw
 from repro.roofline import analysis as roofline
 from repro.train import make_train_step
-from repro.utils import map_with_paths, tree_bytes
+from repro.utils import tree_bytes
 
 SHAPES = {
     "train_4k": dict(kind="train", seq=4096, batch=256),
@@ -179,8 +179,6 @@ def lower_cell(arch: str, shape: str, multi_pod: bool,
             notes["n_micro"] = nm
             from repro.optim.adamw import AdamWConfig
             step = make_train_step(cfg, AdamWConfig(), n_micro=nm, remat=True)
-            o_specs = adamw.state_specs(p_specs)
-            o_axes = {"m": p_axes, "v": p_axes, "master": p_axes, "step": ()}
             zaxes = ("pod", "data") if multi_pod else ("data",)
             o_sh = {"m": shd.zero1_shardings(rules, p_specs, p_axes, zaxes),
                     "v": shd.zero1_shardings(rules, p_specs, p_axes, zaxes),

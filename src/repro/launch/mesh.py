@@ -46,7 +46,10 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many (possibly fake) local devices exist."""
     n = len(jax.devices())
-    assert data * model <= n, (data, model, n)
+    if data * model > n:
+        raise ValueError(
+            f"mesh (data={data}, model={model}) needs {data * model} "
+            f"devices but only {n} are visible")
     return jax.make_mesh((data, model), ("data", "model"))
 
 
@@ -67,7 +70,9 @@ def make_serving_mesh(devices: Optional[int] = None, *, data: int = 1):
             f"requested {n} devices but only {avail} are visible; on CPU "
             "set XLA_FLAGS=--xla_force_host_platform_device_count="
             f"{n} before the first jax import")
-    assert n % data == 0, (n, data)
+    if n % data:
+        raise ValueError(f"data={data} must divide the device count {n} "
+                         "(equal contiguous shard pools)")
     return jax.make_mesh((data, n // data), ("data", "model"))
 
 
@@ -102,7 +107,9 @@ def param_shardings(cfg, mesh, profile: str = "serve", **overrides) -> Any:
             **{**shd.TRAIN_OVERRIDES, **overrides})
         return shd.tree_shardings(rules, lm.param_specs(cfg),
                                   lm.param_axes(cfg))
-    assert profile == "serve", profile
+    if profile != "serve":
+        raise ValueError(
+            f"profile {profile!r} not in ('train', 'serve')")
     from repro.core.compress import is_compressible
     n_model = mesh.shape.get("model", 1)
     repl = NamedSharding(mesh, P())

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import CompileBudgetError, CompileGuard
 from repro.configs import get_config, get_smoke_config
 from repro.core import BitDeltaSpec, DeltaDQSpec, compress
 from repro.models import lm
@@ -46,7 +47,8 @@ def synth_tenants(cfg, base, n, spec, rng, *, budget_bits=None):
     takes ``budget_bits``).
     """
     specs = spec if isinstance(spec, list) else [spec] * n
-    assert len(specs) == n, (len(specs), n)
+    if len(specs) != n:
+        raise ValueError(f"{len(specs)} codec specs for {n} tenants")
     out = []
     for t in range(n):
         ft = jax.tree.map(
@@ -121,7 +123,13 @@ def run_lifecycle(args, cfg, base, rng):
                for i, (t, p) in enumerate(stream) if t == "tenant0"]
     for _ in range(2):
         eng.step(eng._now())            # tenant0 genuinely in flight
-    compiles = eng._decode._cache_size()
+    # Warmup done — from here the decode step must never retrace.
+    # CompileGuard (repro.analysis) is the one recompile-detection
+    # implementation; strict mode additionally raises AT the retracing
+    # call instead of at the end-of-drill check.
+    guard = CompileGuard(eng, max_new={"decode": 0},
+                         strict=args.strict_compile,
+                         label="lifecycle").attach()
     for t in range(1, n):
         name = f"tenant{t}"
         reg.ingest(name, fts[t]); reg.pump()
@@ -132,23 +140,32 @@ def run_lifecycle(args, cfg, base, rng):
                     for i, (tn, p) in enumerate(stream) if tn == name]
         eng.step(eng._now())
     eng.run()
-    assert all(r.done for _, r in phase_a)
+    undone = [r.rid for _, r in phase_a if not r.done]
+    if undone:
+        raise RuntimeError(
+            f"lifecycle phase A left requests {undone} unfinished")
 
     # rollout: tenant0 v2 serves NEW requests only; then retire tenant1
     reg.ingest("tenant0", ft_v2); reg.pump()
     phase_b = [(i, eng.submit("tenant0", p, max_new_tokens=args.max_new))
                for i, (t, p) in enumerate(stream) if t == "tenant0"][:2]
     eng.run()
-    assert all(r.done for _, r in phase_b)
+    undone = [r.rid for _, r in phase_b if not r.done]
+    if undone:
+        raise RuntimeError(
+            f"lifecycle phase B left requests {undone} unfinished")
     if n > 1:
         eng.unregister_tenant("tenant1")
+    guard.detach()
 
-    recompiles = eng._decode._cache_size() - compiles
+    recompiles = guard.new_compiles("decode")
     rep = eng.metrics.report()
     print(f"lifecycle events: {rep['tenant_lifecycle']}")
     print(f"decode recompiles across register/rollout/retire: {recompiles}")
-    if recompiles:
-        raise SystemExit("hot lifecycle retraced the decode step")
+    try:
+        guard.check()
+    except CompileBudgetError as e:
+        raise SystemExit(f"hot lifecycle retraced the decode step: {e}")
 
     if args.check_identity:
         # registration time must not change tokens: reference engines
@@ -216,6 +233,13 @@ def main():
                          "fails on any decode-step recompile; combine "
                          "with --check-identity to gate tokens against "
                          "all-up-front engines")
+    ap.add_argument("--strict-compile", action="store_true",
+                    help="attach a strict CompileGuard to the serving "
+                         "engine: any jit retrace of an already-seen "
+                         "signature raises at the retracing call "
+                         "(static-decode-shape contract, enforced live); "
+                         "with --lifecycle, the drill's post-warmup "
+                         "recompile gate also raises at the call site")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
@@ -346,6 +370,11 @@ def main():
                     args.telemetry_out, args.telemetry_snapshot_secs)
         eng_ = ContinuousEngine(cfg, base, n_slots=args.slots,
                                 max_seq=args.max_seq, mesh=mesh_, **kw)
+        guard_ = None
+        if args.strict_compile and not default_path:
+            # fresh engine: every first trace is first=True and allowed;
+            # strict mode raises only on RE-traces of a seen signature
+            guard_ = CompileGuard(eng_, strict=True, label="serve").attach()
         for name, deltas, report in tenants:
             eng_.register_tenant(name, deltas, report)
         reqs_ = []
@@ -354,7 +383,12 @@ def main():
                                      max_new_tokens=args.max_new,
                                      arrival=i * args.arrival_gap))
         metrics_ = eng_.run()
-        assert all(r.done for r in reqs_)
+        if guard_ is not None:
+            guard_.detach()
+        undone = [r.rid for r in reqs_ if not r.done]
+        if undone:
+            raise RuntimeError(
+                f"engine run() left requests {undone} unfinished")
         return eng_, reqs_, metrics_
 
     ref_reqs = None

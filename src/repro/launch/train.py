@@ -15,7 +15,6 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from repro.checkpoint import Checkpointer
 from repro.configs import get_config, get_smoke_config

@@ -157,7 +157,8 @@ def _ssm_table(cfg: ArchConfig):
         ("conv_x_b", (d_inner,), (None,), "zeros"),
         ("conv_bc_w", (W, bc), (None, None), "normal"),
         ("conv_bc_b", (bc,), (None,), "zeros"),
-        ("a_log", (H,), (None,), lambda r, s: jnp.log(jax.random.uniform(r, s, minval=1.0, maxval=16.0))),
+        ("a_log", (H,), (None,),
+         lambda r, s: jnp.log(jax.random.uniform(r, s, minval=1.0, maxval=16.0))),
         ("d_skip", (H,), (None,), "ones"),
         ("dt_bias", (H,), (None,), lambda r, s: jnp.log(jnp.expm1(
             jax.random.uniform(r, s, minval=1e-3, maxval=0.1)))),
@@ -397,8 +398,10 @@ def _attn_block_decode(cfg, p, d, x, pos, window, cache):
         positions = pos[None] if jnp.ndim(pos) == 0 else pos
         q, k, v = qkv_project(u, p, d, cfg, positions)
         slot = pos % S_c
-        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
         cp = cache["pos"].at[:, slot].set(positions[0])
     out = attention(q, ck, cv, positions, cp, window=window, causal=True,
                     cap=cfg.attn_softcap)
@@ -508,13 +511,17 @@ def _walk(cfg: ArchConfig, params, x, positions, deltas=None, caches=None,
             p_a = _slice(params["attn"], ai)
             d_a = dindex(dget(deltas, "attn"), ai)
             if decode:
-                x, new_caches[li] = _attn_block_decode(cfg, p_a, d_a, x, decode_pos, window, cache_l)
+                x, new_caches[li] = _attn_block_decode(
+                    cfg, p_a, d_a, x, decode_pos, window, cache_l)
             elif cache_l is not None and chunk:
-                x, new_caches[li] = _attn_block_chunk(cfg, p_a, d_a, x, positions, window, cache_l, chunk_valid)
+                x, new_caches[li] = _attn_block_chunk(
+                    cfg, p_a, d_a, x, positions, window, cache_l, chunk_valid)
             elif cache_l is not None:
-                x, new_caches[li] = _attn_block_prefill(cfg, p_a, d_a, x, positions, window, cache_l)
+                x, new_caches[li] = _attn_block_prefill(
+                    cfg, p_a, d_a, x, positions, window, cache_l)
             else:
-                x = mr(lambda x, p, d: _attn_block_train(cfg, p, d, x, positions, window))(x, p_a, d_a)
+                x = mr(lambda x, p, d: _attn_block_train(
+                    cfg, p, d, x, positions, window))(x, p_a, d_a)
             if kind == "moe":
                 p_m = _slice(params["moe"], j)
                 d_m = dindex(dget(deltas, "moe"), j)
@@ -584,7 +591,10 @@ def _walk(cfg: ArchConfig, params, x, positions, deltas=None, caches=None,
 # ---------------------------------------------------------------------------
 def _scan_walk(cfg: ArchConfig, params, x, positions, deltas=None, remat=False):
     kind = uniform_kind(cfg)
-    assert kind is not None
+    if kind is None:
+        raise ValueError(
+            f"scan walk needs a uniform layer arch; {cfg.name!r} mixes "
+            f"layer_kinds {sorted(set(cfg.layer_kinds))}")
     windows = jnp.asarray(cfg.layer_windows, jnp.int32)
 
     if kind == "attn":

@@ -82,7 +82,6 @@ def moe_ffn(x: jnp.ndarray, p: dict, d: Optional[dict], cfg: ArchConfig,
 
 def aux_load_balance_loss(logits: jnp.ndarray, eidx: jnp.ndarray, n_experts: int) -> jnp.ndarray:
     """Switch-style load-balancing auxiliary loss (training)."""
-    T = logits.shape[0]
     probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
     frac_routed = jnp.mean(jax.nn.one_hot(eidx[:, 0], n_experts), axis=0)
     frac_prob = jnp.mean(probs, axis=0)

@@ -37,7 +37,8 @@ def _gates(xb, p):
     return a, gated_in
 
 
-def rglru_scan(xb: jnp.ndarray, p: dict, h0: Optional[jnp.ndarray]) -> tuple[jnp.ndarray, jnp.ndarray]:
+def rglru_scan(xb: jnp.ndarray, p: dict,
+               h0: Optional[jnp.ndarray]) -> tuple[jnp.ndarray, jnp.ndarray]:
     """xb [B,S,lru] (f32) -> (h [B,S,lru], h_last [B,lru])."""
     a, b = _gates(xb, p)
     if h0 is not None:
@@ -71,6 +72,8 @@ def rglru_block(x, p, d, cfg: ArchConfig, state: Optional[RecState] = None,
     xb = (xb + p["conv_b"]).astype(jnp.float32)
 
     if decode:
+        # deltalint: allow[DL003] traced-body shape invariant: decode is
+        # S=1 by construction; S is static at trace time
         assert S == 1
         h0 = state.h if state is not None else jnp.zeros((B, lru), jnp.float32)
         a, b = _gates(xb[:, 0], p)

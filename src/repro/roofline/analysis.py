@@ -18,8 +18,6 @@ import dataclasses
 import re
 from typing import Optional
 
-import numpy as np
-
 # TPU v5e per chip (task-provided constants)
 PEAK_FLOPS = 197e12          # bf16
 HBM_BW = 819e9               # bytes/s

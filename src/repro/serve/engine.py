@@ -199,7 +199,10 @@ class DeltaResidency:
         leaves = [l for l in jax.tree.leaves(stacked, is_leaf=_is_pd)
                   if _is_pd(l)]
         if not leaves:
-            raise ValueError("residency needs a non-empty stacked delta tree")
+            raise ValueError(
+                "residency needs a stacked delta tree with PackedDelta "
+                f"leaves; got {type(stacked).__name__} with "
+                f"{len(jax.tree.leaves(stacked))} non-delta leaves")
         self.n_rows = int(leaves[0].idx.shape[0])
         self.row_bytes = int(sum(
             4 * int(np.prod(l.idx.shape[1:])) for l in leaves))
@@ -439,15 +442,19 @@ class TenantTable:
     def check_compatible(self, tree: Any) -> None:
         """Raise ValueError unless ``tree`` can fill a row (called BEFORE
         any engine state mutates, so a rejected tenant is a no-op)."""
-        if jax.tree.structure(tree, is_leaf=_is_pd) != self.structure:
+        got_struct = jax.tree.structure(tree, is_leaf=_is_pd)
+        if got_struct != self.structure:
             raise ValueError(
-                "tenant delta tree structure does not match the tenant "
-                "table template; cannot hot-register")
-        if _stack_signature(tree) != self.signature:
+                f"tenant delta tree structure {got_struct} does not match "
+                f"the tenant table template {self.structure}; cannot "
+                "hot-register")
+        got_sig = _stack_signature(tree)
+        if got_sig != self.signature:
             raise ValueError(
-                "tenant packing meta (codec/shape signature) does not "
-                "match the tenant table template; heterogeneous-codec "
-                "fleets need the dynamic (tenant_capacity=None) engine")
+                f"tenant packing meta signature {got_sig!r} does not "
+                f"match the tenant table template {self.signature!r}; "
+                "heterogeneous-codec fleets need the dynamic "
+                "(tenant_capacity=None) engine")
 
     def alloc(self) -> int:
         """Claim the lowest free row; ValueError when the table is full."""
@@ -582,12 +589,16 @@ class ContinuousEngine:
         # "segments": unique-tenant decode dispatch (each distinct delta
         # dequantized once per step); "per_row": the legacy per-row
         # gather path, kept as the behavioral fallback.
-        assert slot_dispatch in ("segments", "per_row"), slot_dispatch
+        if slot_dispatch not in ("segments", "per_row"):
+            raise ValueError(f"slot_dispatch={slot_dispatch!r} not in "
+                             "('segments', 'per_row')")
         self.slot_dispatch = slot_dispatch
         # "auto": stacked tenant deltas shard their output-column axis
         # over `model` when it divides (delta_shardings(shard_output=True)),
         # replicated otherwise; "replicated": always replicate.
-        assert shard_deltas in ("auto", "replicated"), shard_deltas
+        if shard_deltas not in ("auto", "replicated"):
+            raise ValueError(f"shard_deltas={shard_deltas!r} not in "
+                             "('auto', 'replicated')")
         self.shard_deltas = shard_deltas
         cache_sh = None
         if mesh is not None:

@@ -191,7 +191,8 @@ class DeltaRegistry:
                 self._ready.append((name, _to_host(rt), report))
             return rec
         if ft_params is None:
-            raise ValueError("ingest needs ft_params or deltas")
+            raise ValueError(
+                f"ingest({name!r}) needs ft_params or deltas; got neither")
         if self._worker is not None:
             rec.state = "queued"
             self._inbox.put((name, ft_params))

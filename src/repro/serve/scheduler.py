@@ -504,13 +504,17 @@ class Scheduler:
         return admitted
 
     def place(self, slot: int, state: SlotState) -> None:
-        assert self.slots[slot] is None, f"slot {slot} already occupied"
+        if self.slots[slot] is not None:
+            raise RuntimeError(
+                f"slot {slot} already occupied by rid "
+                f"{self.slots[slot].request.rid}")
         self.slots[slot] = state
 
     def release(self, slot: int) -> Request:
         """Free a slot. Refuses to drop an unfinished sequence."""
         state = self.slots[slot]
-        assert state is not None, f"slot {slot} already free"
+        if state is None:
+            raise RuntimeError(f"slot {slot} already free")
         if not state.request.done:
             raise RuntimeError(
                 f"refusing to evict unfinished request {state.request.rid} "
@@ -552,7 +556,9 @@ class ChunkQueue:
         self._cursors: dict[int, int] = {}       # rid -> tokens consumed
 
     def add(self, slot: int, req: Request) -> None:
-        assert req.rid not in self._entries, f"rid {req.rid} already queued"
+        if req.rid in self._entries:
+            raise RuntimeError(
+                f"rid {req.rid} already queued for chunked prefill")
         self._entries[req.rid] = (slot, req)
         self._cursors[req.rid] = 0
 

@@ -167,7 +167,11 @@ class StreamingHistogram:
         """Pooled histogram (e.g. all-tenant TTFT). Same layout required."""
         if (self.lo, self.per_decade, self.n_buckets) != \
                 (other.lo, other.per_decade, other.n_buckets):
-            raise ValueError("cannot merge histograms with different layouts")
+            raise ValueError(
+                "cannot merge histograms with different layouts: "
+                f"(lo, per_decade, n_buckets)="
+                f"{(self.lo, self.per_decade, self.n_buckets)} vs "
+                f"{(other.lo, other.per_decade, other.n_buckets)}")
         out = StreamingHistogram(self.lo, self.n_buckets // self.per_decade,
                                  self.per_decade, self.exact_cap)
         out.n = self.n + other.n

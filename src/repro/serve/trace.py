@@ -44,6 +44,7 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
 __all__ = [
+    "EVENT_SCHEMA",
     "ServeEvent", "EventBus", "Tracer",
     "attribution", "note_path", "path_label",
     "validate_chrome_trace",
@@ -53,6 +54,35 @@ __all__ = [
 # ---------------------------------------------------------------------------
 # Events
 # ---------------------------------------------------------------------------
+# The closed set of event names any ``bus.emit`` site may use. Adding an
+# event means adding it here FIRST — deltalint rule DL004 cross-checks
+# every emit site against this dict (and flags entries nothing emits),
+# because a typo'd kind silently falls through every ``_on_<kind>``
+# consumer dispatch: no metrics, no trace span, no SLO accounting, no
+# error. Keys are event kinds; values say who emits it and what it marks.
+EVENT_SCHEMA: Dict[str, str] = {
+    "submit": "engine: request entered the queue (rid, tenant, deadline)",
+    "admit": "engine: request won a slot (rid, slot, wait, deadline_slack)",
+    "prefill": "engine: whole-prompt prefill span closed (rid, t_start)",
+    "prefill_chunk": "engine: one chunk of a chunked prefill (rid, start, "
+                     "length, last)",
+    "first_token": "engine: first token surfaced for a request (rid, ttft)",
+    "token": "engine: one generated token (rid, tenant)",
+    "shard_token": "engine: token attributed to a data shard (data>1 only)",
+    "step": "engine: one batched decode step span (n_active, path, notes)",
+    "done": "engine: request finished (rid, latency, ttft, n_tokens)",
+    "start": "engine: run loop started",
+    "stop": "engine: run loop stopped",
+    "jit_trace": "engine: a jitted entry (re)traced (signature, site, "
+                 "first) — first=False is a recompile; CompileGuard "
+                 "strict mode raises on these outside warmup",
+    "tenant_register": "engine: new tenant delta installed (tenant, row)",
+    "tenant_rollout": "engine: existing tenant's delta replaced in place",
+    "tenant_retire": "engine: tenant removed from the serving table",
+    "tenant_ready": "registry: compressed artifact ready to serve (tier)",
+    "tenant_promote": "registry: tenant promoted cold->warm on demand",
+    "tenant_evict": "registry: tenant demoted/evicted by traffic pressure",
+}
 @dataclass
 class ServeEvent:
     """One engine event. ``t`` is engine time (injectable clock); span-like

@@ -32,7 +32,9 @@ def make_loss(cfg: ArchConfig, remat: bool = True):
 def _split_micro(batch: dict, n_micro: int) -> dict:
     def sp(x):
         b = x.shape[0]
-        assert b % n_micro == 0, (b, n_micro)
+        if b % n_micro:
+            raise ValueError(
+                f"batch size {b} must be a multiple of n_micro={n_micro}")
         return x.reshape(n_micro, b // n_micro, *x.shape[1:])
     return jax.tree.map(sp, batch)
 

@@ -1,0 +1,384 @@
+"""Fixture tests for the deltalint rules (DL000-DL008).
+
+Each rule gets (at least) a violating snippet it must fire on and a
+compliant twin it must stay silent on; the escape hatch and the DL004
+multi-file cross-check have their own cases. The suite ends with the
+self-gate: the shipped ``src/repro`` tree must lint clean, which is the
+same check CI's lint job runs.
+
+No jax import anywhere in this file — the lint layer must stay loadable
+(and fast) without an accelerator stack.
+"""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.analysis.lint import RULES, lint_paths, lint_source
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def rules_of(findings):
+    return [f.rule for f in findings]
+
+
+def hits(source, rel, rule):
+    return [f for f in lint_source(source, rel) if f.rule == rule]
+
+
+# ---------------------------------------------------------------------------
+# DL001 — dot-family reductions in identity paths
+# ---------------------------------------------------------------------------
+def test_dl001_fires_on_einsum_in_fallback():
+    src = "import jax.numpy as jnp\ny = jnp.einsum('bi,bio->bo', x, w)\n"
+    found = hits(src, "repro/kernels/fallback.py", "DL001")
+    assert len(found) == 1 and found[0].line == 2
+
+
+def test_dl001_fires_on_dot_general_and_jnp_dot():
+    src = ("from jax import lax\nimport jax.numpy as jnp\n"
+           "a = lax.dot_general(x, w, d)\nb = jnp.dot(x, w)\n"
+           "c = jnp.matmul(x, w)\n")
+    assert len(hits(src, "repro/core/apply.py", "DL001")) == 3
+
+
+def test_dl001_silent_on_compliant_twin():
+    # the sanctioned formulation: elementwise multiply + axis sum, and
+    # the @ operator (base matmuls are legitimate; the rule targets the
+    # *named reduce-order-sensitive* calls in correction paths)
+    src = ("import jax.numpy as jnp\n"
+           "y = jnp.sum(x[:, :, None] * dense, axis=1)\n"
+           "z = x @ w\n")
+    assert hits(src, "repro/kernels/fallback.py", "DL001") == []
+
+
+def test_dl001_out_of_scope_file_not_checked():
+    src = "import jax.numpy as jnp\ny = jnp.einsum('ij,jk->ik', a, b)\n"
+    assert hits(src, "repro/models/lm.py", "DL001") == []
+
+
+def test_dl001_escape_hatch_with_reason():
+    src = ("import jax.numpy as jnp\n"
+           "# deltalint: allow[DL001] audited MoE site, grouped serving\n"
+           "y = jnp.einsum('e...d,edf->e...f', x, w)\n")
+    assert hits(src, "repro/core/apply.py", "DL001") == []
+
+
+def test_allow_comment_skips_comment_continuations():
+    src = ("import jax.numpy as jnp\n"
+           "# deltalint: allow[DL001] audited site whose justification\n"
+           "# spans two comment lines before the code\n"
+           "y = jnp.einsum('e...d,edf->e...f', x, w)\n")
+    assert hits(src, "repro/core/apply.py", "DL001") == []
+
+
+def test_allow_without_reason_is_dl000():
+    src = ("import jax.numpy as jnp\n"
+           "y = jnp.einsum('ij,jk->ik', a, b)  # deltalint: allow[DL001]\n")
+    found = lint_source(src, "repro/core/apply.py")
+    assert rules_of(found) == ["DL000"]   # suppressed, but flagged reasonless
+
+
+# ---------------------------------------------------------------------------
+# DL002 — nondeterminism in core/ + serve/
+# ---------------------------------------------------------------------------
+def test_dl002_fires_on_hash_time_and_global_rng():
+    src = ("import time\nimport numpy as np\n"
+           "s = hash(path)\n"
+           "t = time.time()\n"
+           "r = np.random.rand(3)\n"
+           "g = np.random.default_rng()\n")
+    assert len(hits(src, "repro/core/compress.py", "DL002")) == 4
+
+
+def test_dl002_silent_on_sanctioned_twins():
+    src = ("import time\nimport zlib\nimport numpy as np\n"
+           "s = zlib.crc32(path.encode())\n"
+           "t = time.monotonic()\n"                 # the injectable default
+           "g = np.random.default_rng(1234)\n"      # explicit seed
+           "r = g.normal(size=3)\n")                # instance RNG, not global
+    assert hits(src, "repro/serve/engine.py", "DL002") == []
+
+
+def test_dl002_launch_timing_loops_out_of_scope():
+    src = "import time\nt0 = time.time()\n"
+    assert hits(src, "repro/launch/serve.py", "DL002") == []
+
+
+# ---------------------------------------------------------------------------
+# DL003 — bare asserts
+# ---------------------------------------------------------------------------
+def test_dl003_fires_on_bare_assert_anywhere_in_repro():
+    src = "def f(x):\n    assert x > 0\n    return x\n"
+    assert len(hits(src, "repro/models/ssm.py", "DL003")) == 1
+
+
+def test_dl003_silent_on_typed_raise():
+    src = ("def f(x):\n"
+           "    if x <= 0:\n"
+           "        raise ValueError(f'x={x} must be positive')\n"
+           "    return x\n")
+    assert hits(src, "repro/models/ssm.py", "DL003") == []
+
+
+def test_dl003_escape_hatch_for_traced_body_invariant():
+    src = ("def step(x):\n"
+           "    # deltalint: allow[DL003] traced-body shape invariant\n"
+           "    assert x.shape[1] == 1\n")
+    assert hits(src, "repro/models/ssm.py", "DL003") == []
+
+
+# ---------------------------------------------------------------------------
+# DL004 — emit names <-> EVENT_SCHEMA (multi-file cross-check)
+# ---------------------------------------------------------------------------
+_TRACE_SRC = ("EVENT_SCHEMA = {\n"
+              "    'token': 'engine: one token',\n"
+              "    'ghost': 'documented but never emitted',\n"
+              "}\n")
+
+
+def _write_tree(tmp_path, trace_src, engine_src):
+    pkg = tmp_path / "repro" / "serve"
+    pkg.mkdir(parents=True)
+    (pkg / "trace.py").write_text(trace_src)
+    (pkg / "engine.py").write_text(engine_src)
+    return [str(pkg / "trace.py"), str(pkg / "engine.py")]
+
+
+def test_dl004_typo_emit_and_dead_schema_entry(tmp_path):
+    paths = _write_tree(
+        tmp_path, _TRACE_SRC,
+        "def go(bus, t):\n"
+        "    bus.emit('token', t)\n"
+        "    bus.emit('tokn', t)\n")        # typo'd name
+    found = [f for f in lint_paths(paths) if f.rule == "DL004"]
+    msgs = sorted(f.message for f in found)
+    assert len(found) == 2
+    assert "'tokn'" in msgs[1] and "not in" in msgs[1]
+    assert "'ghost'" in msgs[0] and "never emitted" in msgs[0]
+
+
+def test_dl004_clean_cross_check(tmp_path):
+    paths = _write_tree(
+        tmp_path,
+        "EVENT_SCHEMA = {'token': 'engine: one token'}\n",
+        "def go(self, t):\n"
+        "    self.bus.emit('token', t)\n"
+        "    self.engine.bus.emit('token' if t else 'token', t)\n")
+    assert [f for f in lint_paths(paths) if f.rule == "DL004"] == []
+
+
+def test_dl004_non_literal_event_name_flagged():
+    src = "def go(bus, name, t):\n    bus.emit(name, t)\n"
+    assert len(hits(src, "repro/serve/registry.py", "DL004")) == 1
+
+
+def test_dl004_reverse_check_needs_engine_in_scope(tmp_path):
+    # linting trace.py alone must NOT flag schema entries as unemitted —
+    # the emitting layer simply isn't part of the run
+    pkg = tmp_path / "repro" / "serve"
+    pkg.mkdir(parents=True)
+    (pkg / "trace.py").write_text(_TRACE_SRC)
+    assert [f for f in lint_paths([str(pkg / "trace.py")])
+            if f.rule == "DL004"] == []
+
+
+def test_dl004_shipped_schema_matches_shipped_emits():
+    found = lint_paths([str(REPO / "src" / "repro" / "serve")])
+    assert [f for f in found if f.rule == "DL004"] == []
+
+
+# ---------------------------------------------------------------------------
+# DL005 — recompile-risk jit patterns
+# ---------------------------------------------------------------------------
+def test_dl005_fires_on_jit_in_loop_and_immediate_invoke():
+    src = ("import jax\n"
+           "for f in fns:\n"
+           "    g = jax.jit(f)\n"           # fresh cache every iteration
+           "y = jax.jit(h)(x)\n")           # compiles every call
+    assert len(hits(src, "repro/kernels/autotune.py", "DL005")) == 2
+
+
+def test_dl005_silent_on_bound_once_jit():
+    src = ("import jax\n"
+           "step = jax.jit(f)\n"
+           "for x in xs:\n"
+           "    y = step(x)\n")
+    assert hits(src, "repro/serve/engine.py", "DL005") == []
+
+
+def test_dl005_tracks_from_import_alias():
+    src = ("from jax import jit\n"
+           "while True:\n"
+           "    g = jit(f)\n")
+    assert len(hits(src, "repro/core/apply.py", "DL005")) == 1
+
+
+def test_dl005_launch_excluded_and_allowable():
+    src = "import jax\nfor f in fns:\n    g = jax.jit(f)\n"
+    assert hits(src, "repro/launch/bench.py", "DL005") == []
+    allowed = ("import jax\n"
+               "for f in fns:\n"
+               "    # deltalint: allow[DL005] deliberate autotune sweep\n"
+               "    g = jax.jit(f)\n")
+    assert hits(allowed, "repro/kernels/autotune.py", "DL005") == []
+
+
+# ---------------------------------------------------------------------------
+# DL006 — codec protocol completeness
+# ---------------------------------------------------------------------------
+_FULL_CODEC = """
+class GoodCodec:
+    name = 'good'
+    spec_cls = object
+    leaf_cls = object
+    def compress_leaf(self): ...
+    def reconstruct_dense(self): ...
+    def runtime_packed(self): ...
+    def storage_bits(self): ...
+    def to_storage_parts(self): ...
+    def from_storage_parts(self): ...
+    def leaf_spec(self): ...
+    def leaf_axes(self): ...
+register_codec(GoodCodec())
+"""
+
+
+def test_dl006_fires_on_partial_codec():
+    src = ("class HalfCodec:\n"
+           "    name = 'half'\n"
+           "    def compress_leaf(self): ...\n"
+           "register_codec(HalfCodec())\n")
+    found = hits(src, "repro/core/codecs.py", "DL006")
+    assert len(found) == 1
+    assert "reconstruct_dense" in found[0].message
+    assert "spec_cls" in found[0].message
+
+
+def test_dl006_silent_on_full_surface():
+    assert hits(_FULL_CODEC, "repro/core/codecs.py", "DL006") == []
+
+
+def test_dl006_walks_same_module_bases():
+    src = ("class Base:\n"
+           "    name = 'b'\n"
+           "    spec_cls = object\n"
+           "    leaf_cls = object\n"
+           "    def compress_leaf(self): ...\n"
+           "    def reconstruct_dense(self): ...\n"
+           "    def runtime_packed(self): ...\n"
+           "    def storage_bits(self): ...\n"
+           "    def to_storage_parts(self): ...\n"
+           "    def from_storage_parts(self): ...\n"
+           "    def leaf_spec(self): ...\n"
+           "class Child(Base):\n"
+           "    def leaf_axes(self): ...\n"
+           "register_codec(Child())\n")
+    assert hits(src, "repro/core/codecs.py", "DL006") == []
+
+
+# ---------------------------------------------------------------------------
+# DL007 — deterministic storage paths
+# ---------------------------------------------------------------------------
+def test_dl007_fires_on_mutable_default_and_set_iteration():
+    src = ("def pack(leaves, seen=[]):\n"
+           "    for k in set(leaves):\n"
+           "        seen.append(k)\n")
+    found = hits(src, "repro/core/pack.py", "DL007")
+    assert len(found) == 2
+
+
+def test_dl007_silent_on_sorted_iteration_and_none_default():
+    src = ("def pack(leaves, seen=None):\n"
+           "    seen = [] if seen is None else seen\n"
+           "    for k in sorted(set(leaves)):\n"
+           "        seen.append(k)\n")
+    # sorted(set(...)) is fine: the For iterates the sorted() call
+    assert hits(src, "repro/core/codecs.py", "DL007") == []
+
+
+def test_dl007_scoped_to_storage_files():
+    src = "def f(xs=[]):\n    pass\n"
+    assert hits(src, "repro/serve/engine.py", "DL007") == []
+
+
+# ---------------------------------------------------------------------------
+# DL008 — value-naming raises in public serve/ functions
+# ---------------------------------------------------------------------------
+def test_dl008_fires_on_static_message():
+    src = ("def submit(self, tenant):\n"
+           "    raise ValueError('unknown tenant')\n")
+    assert len(hits(src, "repro/serve/engine.py", "DL008")) == 1
+
+
+def test_dl008_fires_on_argless_and_concat_static():
+    src = ("def merge(self, other):\n"
+           "    raise RuntimeError()\n"
+           "def check(self, x):\n"
+           "    raise TypeError('bad ' + 'layout')\n")
+    assert len(hits(src, "repro/serve/telemetry.py", "DL008")) == 2
+
+
+def test_dl008_silent_when_value_is_named():
+    src = ("def submit(self, tenant):\n"
+           "    raise ValueError(f'unknown tenant {tenant!r}')\n"
+           "def place(self, slot):\n"
+           "    raise RuntimeError('slot %d occupied' % slot)\n")
+    assert hits(src, "repro/serve/scheduler.py", "DL008") == []
+
+
+def test_dl008_private_functions_and_other_dirs_exempt():
+    src = "def _inner(x):\n    raise ValueError('nope')\n"
+    assert hits(src, "repro/serve/engine.py", "DL008") == []
+    pub = "def f(x):\n    raise ValueError('nope')\n"
+    assert hits(pub, "repro/core/pack.py", "DL008") == []
+
+
+# ---------------------------------------------------------------------------
+# Self-gate: the shipped tree lints clean, via API and via the CLI
+# ---------------------------------------------------------------------------
+def test_shipped_tree_is_clean():
+    findings = lint_paths([str(REPO / "src" / "repro")])
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+def test_cli_exits_zero_and_writes_json_report(tmp_path):
+    report = tmp_path / "findings.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint",
+         str(REPO / "src" / "repro"), "--json", str(report)],
+        capture_output=True, text=True, cwd=str(REPO),
+        env={**os.environ, "PYTHONPATH": str(REPO / "src")},
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    data = json.loads(report.read_text())
+    assert data["findings"] == [] and data["files"] > 50
+
+
+def test_cli_exits_one_on_violation(tmp_path):
+    bad = tmp_path / "repro" / "core"
+    bad.mkdir(parents=True)
+    (bad / "pack.py").write_text("def f(x):\n    assert x\n")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", str(tmp_path)],
+        capture_output=True, text=True, cwd=str(REPO),
+        env={**os.environ, "PYTHONPATH": str(REPO / "src")},
+    )
+    assert proc.returncode == 1
+    assert "DL003" in proc.stdout
+
+
+def test_rule_table_is_closed():
+    # every finding a fixture produced uses a documented rule id
+    assert set(RULES) == {f"DL00{i}" for i in range(9)}
+
+
+def test_syntax_error_reported_not_raised(tmp_path):
+    pkg = tmp_path / "repro"
+    pkg.mkdir()
+    (pkg / "broken.py").write_text("def f(:\n")
+    found = lint_paths([str(pkg / "broken.py")])
+    assert rules_of(found) == ["DL000"]
+    assert "cannot lint" in found[0].message

@@ -1,0 +1,256 @@
+"""CompileGuard: the single recompile-detection implementation.
+
+Unit half: a fake engine whose jitted entries are plain counters —
+exercises budgets, max_new, snapshot/new_compiles arithmetic, warmup
+re-baselining, strict event-bus mode, and the context-manager protocol
+without touching jax.
+
+Regression half: a real ContinuousEngine on the smoke config. The
+injected-recompile test is the reason this module exists — it drives the
+engine's actual decode jit with a *different batch extent* (the exact
+bug class the static-decode-shape contract forbids), and shows the
+guard catching it where the old hand-rolled ``_cache_size()`` deltas
+would have had to be re-derived at every call site. It also proves the
+guard's arithmetic equals the raw cache-size delta, so migrating the
+lifecycle/scheduler tests and the bench gate onto it changed no
+semantics.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import CompileBudgetError, CompileGuard, count_recompiles
+from repro.analysis.compile_guard import ENTRY_PATHS
+from repro.configs import get_smoke_config
+from repro.core import DeltaDQSpec, compress
+from repro.models import lm
+from repro.serve import ContinuousEngine, VirtualClock
+from repro.serve.trace import EventBus, ServeEvent
+
+
+# ---------------------------------------------------------------------------
+# Fake engine: jitted entries are counters
+# ---------------------------------------------------------------------------
+class FakeJit:
+    def __init__(self, n=1):
+        self.n = n
+
+    def compile(self, k=1):
+        self.n += k
+
+    def _cache_size(self):
+        return self.n
+
+
+class FakeEngine:
+    def __init__(self):
+        self._decode = FakeJit()
+        self._prefill = FakeJit(3)
+        self.bus = EventBus()
+
+
+def retrace_ev(first=False, **extra):
+    return ServeEvent("jit_trace", 0.0,
+                      {"first": first, "path": "decode",
+                       "sig": ("decode", 1, False), **extra})
+
+
+def test_unknown_entry_rejected_at_construction():
+    with pytest.raises(ValueError, match="decod"):
+        CompileGuard(FakeEngine(), budgets={"decod": 1})
+    with pytest.raises(ValueError, match="known entries"):
+        CompileGuard(FakeEngine(), max_new={"everything": 0})
+
+
+def test_entries_and_sizes_resolve_by_duck_type():
+    guard = CompileGuard(FakeEngine())
+    assert set(guard.entries()) == {"decode", "prefill"}
+    assert guard.sizes() == {"decode": 1, "prefill": 3}
+    # the full path table is a superset; unresolvable entries are skipped
+    assert set(guard.entries()) <= set(ENTRY_PATHS)
+
+
+def test_new_compiles_counts_from_snapshot():
+    eng = FakeEngine()
+    guard = CompileGuard(eng)
+    assert guard.new_compiles("decode") == 0
+    eng._decode.compile(2)
+    assert guard.new_compiles("decode") == 2
+    assert guard.report()["decode"] == {"total": 3, "new": 2}
+    guard.snapshot()
+    assert guard.new_compiles("decode") == 0
+
+
+def test_budget_total_enforced():
+    eng = FakeEngine()
+    guard = CompileGuard(eng, budgets={"decode": 1})
+    guard.check()                       # at budget: fine
+    eng._decode.compile()
+    with pytest.raises(CompileBudgetError) as e:
+        guard.check()
+    assert "'decode' compiled 2 time(s), budget 1" in str(e.value)
+
+
+def test_max_new_enforced_and_labelled():
+    eng = FakeEngine()
+    guard = CompileGuard(eng, max_new={"decode": 0}, label="lifecycle")
+    guard.check()
+    eng._decode.compile()
+    with pytest.raises(CompileBudgetError) as e:
+        guard.check()
+    msg = str(e.value)
+    assert msg.startswith("[lifecycle] ")
+    assert "recompiled 1 time(s) since baseline" in msg
+    assert "full report" in msg         # the whole table rides along
+
+
+def test_context_manager_checks_on_clean_exit_only():
+    eng = FakeEngine()
+    with pytest.raises(CompileBudgetError):
+        with CompileGuard(eng, max_new={"decode": 0}):
+            eng._decode.compile()
+    # a body exception propagates un-masked (no budget check on top)
+    eng2 = FakeEngine()
+    with pytest.raises(KeyError):
+        with CompileGuard(eng2, max_new={"decode": 0}):
+            eng2._decode.compile()
+            raise KeyError("body error wins")
+
+
+def test_strict_mode_raises_at_emit_site():
+    eng = FakeEngine()
+    guard = CompileGuard(eng, strict=True).attach()
+    eng.bus.emit("token", 0.0)                       # unrelated: ignored
+    eng.bus.emit("jit_trace", 0.0, first=True)       # first trace: fine
+    with pytest.raises(CompileBudgetError, match="retrace outside warmup"):
+        eng.bus.emit("jit_trace", 0.0, first=False, path="decode",
+                     sig=("decode", 1, False))
+    guard.detach()
+    assert len(guard.retraces) == 1
+
+
+def test_non_strict_records_without_raising():
+    eng = FakeEngine()
+    guard = CompileGuard(eng).attach()
+    eng.bus.emit("jit_trace", 0.0, first=False)
+    assert len(guard.retraces) == 1
+    guard.detach()
+    eng.bus.emit("jit_trace", 0.0, first=False)      # detached: unseen
+    assert len(guard.retraces) == 1
+
+
+def test_attach_detach_manage_bus_consumers():
+    eng = FakeEngine()
+    guard = CompileGuard(eng)
+    assert guard.attach() is guard
+    assert guard in eng.bus.consumers
+    guard.attach()                                   # idempotent
+    assert eng.bus.consumers.count(guard) == 1
+    guard.detach()
+    assert guard not in eng.bus.consumers
+
+
+def test_attach_without_bus_is_an_error():
+    class NoBus:
+        _decode = FakeJit()
+    with pytest.raises(ValueError, match="has no .bus"):
+        CompileGuard(NoBus()).attach()
+
+
+def test_warmup_suspends_strict_and_rebaselines():
+    eng = FakeEngine()
+    guard = CompileGuard(eng, max_new={"decode": 0}, strict=True).attach()
+    with guard.warmup():
+        eng._decode.compile(2)                       # warmup traces
+        guard.consume(retrace_ev())                  # no raise inside warmup
+    assert guard.retraces == []                      # cleared on exit
+    guard.check()                                    # re-baselined: 0 new
+    eng._decode.compile()
+    with pytest.raises(CompileBudgetError):
+        guard.check()
+    guard.detach()
+
+
+def test_consume_direct_event_objects():
+    guard = CompileGuard(FakeEngine(), strict=True)
+    guard._in_warmup = True
+    guard.consume(retrace_ev())
+    assert len(guard.retraces) == 1
+
+
+def test_count_recompiles_helper():
+    eng = FakeEngine()
+    assert count_recompiles(eng, lambda: None) == 0
+    assert count_recompiles(eng, lambda: eng._decode.compile(3)) == 3
+    assert count_recompiles(eng, lambda: eng._prefill.compile(),
+                            entry="prefill") == 1
+
+
+# ---------------------------------------------------------------------------
+# Regression half: real engine, injected recompile
+# ---------------------------------------------------------------------------
+SPEC = DeltaDQSpec(alpha=2.0, k_bits=8, h_g=32)
+
+
+@pytest.fixture(scope="module")
+def served():
+    """A small engine that has already served traffic (decode jit warm)."""
+    cfg = get_smoke_config("llama3.2-1b")
+    rng = jax.random.PRNGKey(0)
+    base = lm.init_params(cfg, rng)
+    ft = jax.tree.map(
+        lambda p: p + 0.05 * jax.random.normal(
+            jax.random.fold_in(rng, 7), p.shape, jnp.float32).astype(p.dtype)
+        if p.ndim >= 2 else p, base)
+    deltas, _ = compress(base, ft, SPEC)
+    eng = ContinuousEngine(cfg, base, n_slots=2, max_seq=64,
+                           clock=VirtualClock(0.0))
+    eng.register_tenant("t0", deltas)
+    rs = np.random.RandomState(0)
+    eng.submit("t0", rs.randint(0, cfg.vocab, size=8), max_new_tokens=4)
+    eng.run()
+    return cfg, eng
+
+
+def _inject_decode_recompile(eng):
+    """Call the engine's decode jit with batch extent 1 instead of
+    n_slots — a NEW signature, so the cache grows by one. The cache is
+    sliced into a fresh copy first because the jit donates argument 1."""
+    cache_copy = jax.tree.map(lambda x: x[:1], eng.kv.cache)
+    tok = jnp.zeros((1, 1), jnp.int32)
+    pos = jnp.zeros((1,), jnp.int32)
+    eng._decode(eng.base, cache_copy, tok, pos, None)
+
+
+def test_steady_state_engine_passes_the_gate(served):
+    _, eng = served
+    guard = CompileGuard(eng, budgets={"decode": 1}, max_new={"decode": 0})
+    guard.check()
+    assert guard.new_compiles("decode") == 0
+    assert "decode" in guard.entries() and "prefill" in guard.entries()
+
+
+def test_guard_catches_injected_recompile(served):
+    _, eng = served
+    guard = CompileGuard(eng, max_new={"decode": 0}, label="inject")
+    raw_before = eng._decode._cache_size()
+    _inject_decode_recompile(eng)
+    raw_delta = eng._decode._cache_size() - raw_before
+    assert raw_delta >= 1                 # the injection really retraced
+    # guard arithmetic == the raw _cache_size() delta the old call sites
+    # hand-rolled, so the migration changed no semantics
+    assert guard.new_compiles("decode") == raw_delta
+    with pytest.raises(CompileBudgetError) as e:
+        guard.check()
+    assert "[inject]" in str(e.value) and "'decode'" in str(e.value)
+
+
+def test_count_recompiles_on_real_engine(served):
+    _, eng = served
+    assert count_recompiles(eng, lambda: None) == 0
+    # once the batch-1 signature is cached, a repeat injection reuses the
+    # executable and the helper must report zero new compiles
+    _inject_decode_recompile(eng)
+    assert count_recompiles(
+        eng, lambda: _inject_decode_recompile(eng)) == 0

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import CompileGuard
 from repro.configs import get_smoke_config
 from repro.core import (
     DeltaDQSpec,
@@ -247,8 +248,8 @@ def test_mixed_stream_token_identical_and_bounded_compiles(dense_setup):
 
     # jit compiled at most once per length bucket (prefill) + once (decode)
     assert eng.prefill_shapes == {8, 16}
-    assert eng._prefill._cache_size() <= len(eng.prefill_shapes)
-    assert eng._decode._cache_size() == 1
+    CompileGuard(eng, budgets={"prefill": len(eng.prefill_shapes),
+                               "decode": 1}).check()
 
     rep = metrics.report()
     assert rep["prefills"] == len(lengths)
@@ -892,7 +893,7 @@ def test_data_sharded_engine_token_identical_to_data1(dense_setup):
     for a, b in zip(reqs1, reqs2):
         np.testing.assert_array_equal(a.output(), b.output())
     # decode still compiles exactly once: data=2 shares the jit signature
-    assert eng2._decode._cache_size() == 1
+    CompileGuard(eng2, budgets={"decode": 1}).check()
 
     # a post-warmup metrics reset must keep the shard bookkeeping
     # (regression: reset_metrics dropped data_shards)
@@ -1054,7 +1055,7 @@ def test_affinity_residency_engine_token_identical(dense_setup):
     assert rep["unique_tenants_mean"] > 0
     # values + packed are two pytree structures at most: the decode jit
     # stays bounded even when residency toggles per step
-    assert e1._decode._cache_size() <= 2
+    CompileGuard(e1, budgets={"decode": 2}).check()
     rep2 = m2.report()
     assert len(rep2["unique_tenants_per_shard_mean"]) == 2
     for s in rep2["shards"]:

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import CompileGuard
 from repro.configs import get_smoke_config
 from repro.core import DeltaDQSpec, compress
 from repro.models import lm
@@ -115,14 +116,13 @@ def test_hot_register_no_recompile_token_identical(setup):
     # decode a few steps so t0/t1 are genuinely in flight
     for _ in range(3):
         eng.step(eng._now())
-    compiles_before = eng._decode._cache_size()
+    guard = CompileGuard(eng, budgets={"decode": 1}, max_new={"decode": 0})
     eng.register_tenant("t2", tenants[2])          # HOT, mid-traffic
     r2 = eng.submit("t2", prompts[2], max_new_tokens=6)
     eng.run()
 
     # zero decode-step recompiles across the hot registration
-    assert compiles_before == 1
-    assert eng._decode._cache_size() == 1
+    guard.check()
     # in-flight sequences untouched; the new tenant matches up-front
     assert list(r0.tokens) == list(ref_reqs[0].tokens)
     assert list(r1.tokens) == list(ref_reqs[1].tokens)
@@ -176,7 +176,7 @@ def test_rollout_old_version_drains_new_requests_switch(setup):
     assert list(r_old.tokens) == list(ref_old.tokens)   # drained on old row
     assert list(r_new.tokens) == list(ref_new.tokens)   # served new version
     assert not eng._retiring                            # row reclaimed
-    assert eng._decode._cache_size() == 1
+    CompileGuard(eng, budgets={"decode": 1}).check()
 
 
 def test_retire_frees_row_and_refuses_in_flight(setup):
@@ -197,7 +197,7 @@ def test_retire_frees_row_and_refuses_in_flight(setup):
         eng.submit("t0", prompts[1], max_new_tokens=4)
     # the name is re-registrable after retirement
     eng.register_tenant("t0", tenants[1])
-    assert eng._decode._cache_size() == 1
+    CompileGuard(eng, budgets={"decode": 1}).check()
 
 
 def test_table_full_and_incompatible_tenant_rejected(setup):
@@ -310,7 +310,7 @@ def test_registry_ingest_compress_register_serve(setup):
     r = reg.submit("a", _prompts(cfg, 1)[0], max_new_tokens=4)
     eng.run()
     assert r.done and len(r.tokens) == 4
-    assert eng._decode._cache_size() == 1
+    CompileGuard(eng, budgets={"decode": 1}).check()
 
 
 def test_registry_cold_spool_roundtrip_identity(setup, tmp_path):
@@ -494,7 +494,7 @@ if HAVE_HYPOTHESIS:
                 for _ in range(2):
                     eng.step(eng._now())
             # invariants after every op
-            assert eng._decode._cache_size() <= 1
+            CompileGuard(eng, budgets={"decode": 1}).check()
             rows = set(eng._rows.values())
             assert len(rows) == len(eng._rows)          # rows unique
             assert 0 not in rows                        # row 0 is base
